@@ -1,0 +1,27 @@
+"""Paper Fig. 5: average remote feature fetches per epoch vs cache size
+(n_hot sweep), demonstrating the long-tail capture."""
+from __future__ import annotations
+
+from benchmarks.common import run_gnn_system
+
+
+def run(dataset="ogbn_products_sim", batch_sizes=(100, 200),
+        cache_sizes=(0, 2048, 8192, 32768, 131072), workers=2, epochs=2):
+    rows = ["batch,n_hot,remote_fetches_per_epoch,hit_rate"]
+    for b in batch_sizes:
+        for nh in cache_sizes:
+            r = run_gnn_system("rapidgnn", dataset, b, workers=workers,
+                               epochs=epochs, n_hot=max(nh, 1),
+                               train=False)
+            rows.append(f"{b},{nh},{r.rpc_count / epochs:.0f},"
+                        f"{r.hit_rate:.3f}")
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

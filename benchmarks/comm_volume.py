@@ -1,0 +1,31 @@
+"""Paper Fig. 4: mean data transferred per training step, RapidGNN vs
+DGL-METIS, across datasets and batch sizes."""
+from __future__ import annotations
+
+from benchmarks.common import run_gnn_system
+
+
+def run(datasets=("ogbn_products_sim", "reddit_sim"),
+        batch_sizes=(100, 200), epochs=2, workers=4):
+    rows = ["dataset,batch,rapidgnn_MB_per_step,dglmetis_MB_per_step,"
+            "reduction_x"]
+    for ds in datasets:
+        for b in batch_sizes:
+            r = run_gnn_system("rapidgnn", ds, b, workers=workers,
+                               epochs=epochs, train=False)
+            m = run_gnn_system("dgl-metis", ds, b, workers=workers,
+                               epochs=epochs, train=False)
+            rmb = r.bytes_per_step / 1e6
+            mmb = m.bytes_per_step / 1e6
+            rows.append(f"{ds},{b},{rmb:.2f},{mmb:.2f},"
+                        f"{mmb / max(rmb, 1e-9):.2f}")
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

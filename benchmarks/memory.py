@@ -1,0 +1,34 @@
+"""Paper Fig. 7: memory scaling -- device (cache) bytes vs baseline and
+the paper's bound 2*n_hot*d + Q*m_max*d."""
+from __future__ import annotations
+
+from repro.graph import load_dataset, partition_graph, KHopSampler
+from repro.core import build_schedule, global_pad_bounds
+from benchmarks.common import run_gnn_system
+
+
+def run(dataset="ogbn_products_sim", batch_size=200,
+        worker_counts=(2, 4), n_hot=8192, Q=4, epochs=2):
+    g = load_dataset(dataset)
+    rows = ["workers,device_cache_MB,bound_MB,baseline_device_MB"]
+    for w in worker_counts:
+        r = run_gnn_system("rapidgnn", dataset, batch_size, workers=w,
+                           epochs=epochs, n_hot=n_hot, Q=Q, train=False)
+        pg = partition_graph(g, w, "metis")
+        sampler = KHopSampler(g, fanouts=(25, 10), batch_size=batch_size)
+        ws = build_schedule(sampler, pg, worker=0, s0=42,
+                            num_epochs=epochs, n_hot=n_hot)
+        m_max, _ = global_pad_bounds(ws)
+        bound = (2 * n_hot * g.feat_dim + Q * m_max * g.feat_dim) * 4
+        rows.append(f"{w},{r.device_cache_bytes / 1e6:.1f},"
+                    f"{bound / 1e6:.1f},0.0")
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Benchmark harness entrypoint: one section per paper table/figure.
+
+``python -m benchmarks.run``        -- fast CPU-sized defaults
+``python -m benchmarks.run --full`` -- paper-scale grids (slow)
+
+Prints CSV blocks per benchmark plus a ``name,us_per_call,derived``
+summary line per section (harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def _section(name, fn, summary):
+    print(f"\n===== {name} =====")
+    t0 = time.time()
+    try:
+        rows = fn()
+        for r in rows:
+            print(r)
+        dt = (time.time() - t0) * 1e6
+        print(f"#summary {name},{dt:.0f},{summary(rows)}")
+        return rows
+    except Exception as e:
+        print(f"#summary {name},0,FAILED:{e}")
+        traceback.print_exc()
+        return []
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (speedup, access_dist, comm_volume, cache_sweep,
+                            scaling, memory, energy, convergence,
+                            embedding_cache)
+
+    if args.full:
+        ds = ("reddit_sim", "ogbn_products_sim", "ogbn_papers_sim")
+        bs = (100, 200, 300)
+        epochs = 4
+    else:
+        ds = ("ogbn_products_sim",)
+        bs = (100, 200)
+        epochs = 2
+
+    _section("table2_speedup",
+             lambda: speedup.run(datasets=ds, batch_sizes=bs,
+                                 epochs=epochs),
+             lambda rows: rows[-1] if rows else "-")
+    _section("fig3_access_distribution", access_dist.run,
+             lambda rows: next((r for r in rows if "once" in r), "-"))
+    _section("fig4_comm_volume",
+             lambda: comm_volume.run(datasets=ds, batch_sizes=bs,
+                                     epochs=epochs),
+             lambda rows: rows[-1] if rows else "-")
+    _section("fig5_cache_sweep",
+             lambda: cache_sweep.run(batch_sizes=bs[:1]),
+             lambda rows: rows[-1] if rows else "-")
+    _section("fig6_scaling", scaling.run,
+             lambda rows: rows[-1] if rows else "-")
+    _section("fig7_memory", memory.run,
+             lambda rows: rows[-1] if rows else "-")
+    _section("table3_energy", energy.run,
+             lambda rows: next((r for r in rows if r.startswith("total")),
+                               "-"))
+    _section("fig9_convergence", convergence.run,
+             lambda rows: rows[-1] if rows else "-")
+    _section("beyond_embedding_cache", embedding_cache.run,
+             lambda rows: rows[-1] if rows else "-")
+    if not args.skip_roofline:
+        from benchmarks import roofline
+
+        def _roof():
+            rows = roofline.roofline_table()
+            out = ["arch,shape,bottleneck,t_compute_s,t_memory_s,"
+                   "t_collective_s,useful_ratio,attn_variant,source"]
+            for r in rows:
+                out.append(
+                    f"{r['arch']},{r['shape']},{r['bottleneck']},"
+                    f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+                    f"{r['t_collective_s']:.4g},{r['useful_ratio']:.3f},"
+                    f"{r['attn_variant']},{r['source']}")
+            return out
+
+        _section("roofline", _roof,
+                 lambda rows: f"{len(rows) - 1}_combos")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Fig. 6: throughput scaling with the number of workers.
+
+Epoch time is the max over workers (the slowest worker gates the epoch,
+synchronous data-parallel SGD); each worker's run is simulated with its
+own schedule + store."""
+from __future__ import annotations
+
+from benchmarks.common import run_gnn_system
+
+
+def run(dataset="ogbn_products_sim", batch_size=200,
+        worker_counts=(2, 3, 4, 8), epochs=2):
+    rows = ["workers,epoch_time_s,speedup_vs_2w,hit_rate"]
+    base = None
+    for w in worker_counts:
+        # slowest-worker epoch time over all partitions
+        times, hits = [], []
+        for wk in range(w):
+            r = run_gnn_system("rapidgnn", dataset, batch_size, workers=w,
+                               epochs=epochs, train=False, worker=wk)
+            times.append(r.wall_time_s / epochs)
+            hits.append(r.hit_rate)
+        t = max(times)
+        base = base or t
+        rows.append(f"{w},{t:.2f},{base / t:.2f},"
+                    f"{sum(hits) / len(hits):.3f}")
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 2: step-time + network-time speedup of RapidGNN over
+DGL-METIS / DGL-Random / Dist-GCN across datasets x batch sizes."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import run_gnn_system, csv_row, GNNResult
+
+
+def run(datasets=("ogbn_products_sim", "reddit_sim"),
+        batch_sizes=(100, 200), epochs=2, workers=4,
+        train=False) -> List[str]:
+    rows = [
+        "dataset,batch,step_speedup_metis,step_speedup_random,"
+        "step_speedup_gcn,net_speedup_metis,net_speedup_random,"
+        "net_speedup_gcn"]
+    agg = {k: [] for k in ("sm", "sr", "sg", "nm", "nr", "ng")}
+    for ds in datasets:
+        for b in batch_sizes:
+            res = {s: run_gnn_system(s, ds, b, workers=workers,
+                                     epochs=epochs, train=train)
+                   for s in ("rapidgnn", "dgl-metis", "dgl-random", "gcn")}
+            r = res["rapidgnn"]
+
+            def step_x(s):
+                return res[s].step_time_ms / max(r.step_time_ms, 1e-9)
+
+            def net_x(s):
+                return res[s].net_time_s / max(r.net_time_s, 1e-9)
+
+            vals = (step_x("dgl-metis"), step_x("dgl-random"),
+                    step_x("gcn"), net_x("dgl-metis"),
+                    net_x("dgl-random"), net_x("gcn"))
+            for k, v in zip(agg, vals):
+                agg[k].append(v)
+            rows.append(f"{ds},{b}," + ",".join(f"{v:.2f}" for v in vals))
+    mean = [sum(v) / len(v) for v in agg.values()]
+    rows.append("average,-," + ",".join(f"{v:.2f}" for v in mean))
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

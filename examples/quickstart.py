@@ -1,0 +1,61 @@
+"""Quickstart: RapidGNN's full pipeline on a synthetic graph in ~30 s.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.graph import load_dataset, partition_graph, KHopSampler
+from repro.core import (build_schedule, ShardedFeatureStore,
+                        RapidGNNRunner, BaselineRunner, NetworkModel)
+from repro.models import (GNNConfig, init_params, make_train_step,
+                          batch_to_device)
+from repro.train import AdamW
+
+# 1. a partitioned graph (the paper's setting: 4 workers, edge-cut parts)
+g = load_dataset("tiny")
+pg = partition_graph(g, num_parts=4, method="metis")
+print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges; "
+      f"edge-cut {pg.edge_cut_fraction():.2f}")
+
+# 2. deterministic schedule: every batch of every epoch enumerated OFFLINE
+sampler = KHopSampler(g, fanouts=[25, 10], batch_size=64)
+ws = build_schedule(sampler, pg, worker=0, s0=42, num_epochs=3,
+                    n_hot=256)
+es = ws.epoch(0)
+print(f"epoch 0: {es.num_batches} batches, {es.remote_ids.size} unique "
+      f"remote nodes, hot-set {es.cache_ids.size}")
+
+# 3. a GraphSAGE model + optimizer (all from scratch, pure JAX)
+cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=64,
+                num_classes=g.num_classes, num_layers=2)
+params = init_params(cfg, jax.random.key(0))
+opt = AdamW(lr=3e-3)
+state = {"p": params, "o": opt.init(params), "hist": []}
+step = make_train_step(cfg, opt)
+
+
+def train_fn(feats, cb):
+    state["p"], state["o"], aux = step(state["p"], state["o"],
+                                       batch_to_device(cb, feats))
+    state["hist"].append(float(aux["acc"]))
+    return float(aux["loss"])
+
+
+# 4. run RapidGNN (cache + prefetch) and the DGL-style baseline
+net = NetworkModel(enabled=True)        # modelled 10 GbE
+store = ShardedFeatureStore(pg, worker=0, net=net)
+r = RapidGNNRunner(ws, store, batch_size=64, Q=4, train_fn=train_fn).run()
+rt = r.totals()
+
+store_b = ShardedFeatureStore(pg, worker=0, net=NetworkModel(enabled=True))
+b = BaselineRunner(ws, store_b, batch_size=64).run()
+bt = b.totals()
+
+print(f"\naccuracy:   {state['hist'][0]:.2f} -> {state['hist'][-1]:.2f}")
+print(f"cache hit rate:        {rt['hit_rate']:.1%}")
+print(f"remote fetch reduction: {bt['rpc_count'] / max(rt['rpc_count'], 1):.1f}x")
+print(f"bytes moved: baseline {bt['remote_bytes']/1e6:.1f} MB vs "
+      f"rapidgnn {(rt['remote_bytes'] + rt['vector_pull_bytes'])/1e6:.1f} MB")
+assert state["hist"][-1] > state["hist"][0]
+print("OK")

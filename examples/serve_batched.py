@@ -1,0 +1,14 @@
+"""Batched serving demo: greedy decode on any assigned architecture's
+reduced config, exercising the KV-cache / ring-buffer / recurrent decode
+paths (deliverable b, serving flavor).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-9b
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "recurrentgemma-9b", "--batch", "4",
+                            "--prompt-len", "8", "--gen", "24"]
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve"] + args))

@@ -1,0 +1,50 @@
+"""Architecture registry: the 10 assigned archs + the paper's GNN configs.
+
+``get_arch(name)`` returns the full-fidelity ArchConfig;
+``get_reduced(name)`` the CPU-sized smoke variant of the same family.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.transformer.common import ArchConfig
+
+_MODULES = {
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+#: archs with native sub-quadratic support for long_500k; the rest run it
+#: with the sliding-window variant (DESIGN.md §5)
+SUBQUADRATIC = {"mamba2-1.3b", "recurrentgemma-9b", "gemma2-2b"}
+
+#: input-shape suite (assignment): name -> (seq_len, global_batch, kind)
+INPUT_SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).ARCH
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return importlib.import_module(_MODULES[name]).reduced()
+
+
+def all_archs() -> Dict[str, ArchConfig]:
+    return {n: get_arch(n) for n in ARCH_NAMES}

@@ -1,0 +1,19 @@
+"""RapidGNN core: deterministic schedule, hot-set cache, prefetch pipeline."""
+from repro.core.schedule import (build_schedule, WorkerSchedule,
+                                 EpochSchedule, CollatedBatch, collate,
+                                 epoch_edge_maxima)
+from repro.core.cache import FeatureCache, DoubleBufferCache
+from repro.core.fetch import ShardedFeatureStore
+from repro.core.prefetch import Prefetcher, SecondaryCacheBuilder, assemble_features
+from repro.core.runtime import RapidGNNRunner, BaselineRunner, global_pad_bounds
+from repro.core.metrics import (EpochMetrics, RunMetrics, NetworkModel,
+                                modelled_energy, POWER)
+
+__all__ = [
+    "build_schedule", "WorkerSchedule", "EpochSchedule", "CollatedBatch",
+    "collate", "epoch_edge_maxima", "FeatureCache", "DoubleBufferCache",
+    "ShardedFeatureStore", "Prefetcher", "SecondaryCacheBuilder",
+    "assemble_features", "RapidGNNRunner", "BaselineRunner",
+    "global_pad_bounds", "EpochMetrics", "RunMetrics", "NetworkModel",
+    "modelled_energy", "POWER",
+]

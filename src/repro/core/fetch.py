@@ -1,0 +1,72 @@
+"""Distributed KV-store feature fetching: VectorPull / SyncPull.
+
+Host-simulation path (this module): the sharded feature store is the
+paper's per-worker KV store; every cross-partition read is accounted (and
+optionally time-charged through the NetworkModel). The device-collective
+path for TPU meshes lives in ``repro.dist.feature_a2a`` (all_to_all over
+the `data` axis) and is exercised by the dry-run.
+
+Paper mapping:
+  VectorPull(ids)  -- one bulk vectorized request building the cache C_s
+  SyncPull(ids)    -- residual-miss fetch; issued by the *prefetcher*, so
+                      it is off the trainer's critical path unless the
+                      trainer outruns the queue.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.metrics import EpochMetrics, NetworkModel
+from repro.graph.partition import PartitionedGraph
+
+
+class ShardedFeatureStore:
+    """Paper's Distributed KV store: features owned per partition."""
+
+    def __init__(self, pg: PartitionedGraph, worker: int,
+                 net: Optional[NetworkModel] = None):
+        self.pg = pg
+        self.worker = worker
+        self.net = net or NetworkModel(enabled=False)
+        self.feat = pg.graph.features     # authoritative global table
+        self.d = pg.graph.feat_dim
+        self.itemsize = self.feat.itemsize
+
+    def _remote_mask(self, ids: np.ndarray) -> np.ndarray:
+        return self.pg.owner[ids] != self.worker
+
+    # -- bulk cache build (one vectorized RPC; paper Alg. 1 line 4) --------
+    def vector_pull(self, ids: np.ndarray, m: EpochMetrics) -> np.ndarray:
+        nbytes = int(ids.shape[0]) * self.d * self.itemsize
+        m.vector_pull_bytes += nbytes
+        # ONE batched request: the per-node marshalling tax is paid once
+        m.modeled_net_time_s += self.net.transfer_time(nbytes, n_rpc=1,
+                                                       n_nodes=1)
+        # bulk pull is off the critical path (built concurrently) -> no sleep
+        return self.feat[ids].copy()
+
+    # -- residual miss fetch (paper Alg. 1 line 14) -------------------------
+    def sync_pull(self, ids: np.ndarray, m: EpochMetrics,
+                  critical_path: bool = False) -> np.ndarray:
+        remote = self._remote_mask(ids)
+        n_remote = int(remote.sum())
+        nbytes = n_remote * self.d * self.itemsize
+        # one RPC per remote partition touched (DistDGL KV-store fan-out)
+        owners = np.unique(self.pg.owner[ids[remote]]) if n_remote else []
+        n_rpc = max(len(owners), 1)
+        m.rpc_count += n_remote          # paper's rpc_e += |M_i|
+        m.sync_pull_calls += 1
+        m.remote_bytes += nbytes
+        t = (self.net.charge(nbytes, n_rpc=n_rpc, n_nodes=n_remote)
+             if critical_path
+             else self.net.transfer_time(nbytes, n_rpc=n_rpc,
+                                         n_nodes=n_remote))
+        m.modeled_net_time_s += t
+        m.sync_net_time_s += t
+        return self.feat[ids].copy()
+
+    # -- local reads are free -----------------------------------------------
+    def local_read(self, ids: np.ndarray) -> np.ndarray:
+        return self.feat[ids].copy()

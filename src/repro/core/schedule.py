@@ -1,0 +1,173 @@
+"""Offline enumeration + cache-candidate selection (paper §3, Alg. 1 l.1-4).
+
+Precomputes, per worker, the full deterministic training schedule:
+  * every epoch's batch metadata  {B_e}  (ids / offsets / locality only),
+  * the access union  N = U_e U_i N_i^e  and  N_remote = N \\ N_local,
+  * per-epoch remote access frequencies  freq(.)  over {B_e},
+  * the hot set  N_cache = top-n_hot of N_remote by freq  (per epoch, so
+    the double buffer C_sec for e+1 can differ from C_s for e),
+  * padding bounds  m_max  and per-layer edge maxima (XLA static shapes).
+
+Like the paper's SSD streaming, epochs can be spilled to disk
+(``spill_dir``) so precompute memory stays bounded on huge runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.partition import PartitionedGraph
+from repro.graph.sampler import KHopSampler, SampledBatch
+
+
+@dataclasses.dataclass
+class EpochSchedule:
+    epoch: int
+    batches: List[SampledBatch]
+    remote_ids: np.ndarray        # unique remote node ids accessed in epoch
+    remote_freq: np.ndarray       # access counts aligned with remote_ids
+    cache_ids: np.ndarray         # top-n_hot remote ids, SORTED (lookup key)
+    m_max: int                    # max |N_i^e| over the epoch
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.batches)
+
+
+@dataclasses.dataclass
+class WorkerSchedule:
+    worker: int
+    s0: int
+    n_hot: int
+    epochs: List[Optional[EpochSchedule]]
+    spill_dir: Optional[str] = None
+
+    def epoch(self, e: int) -> EpochSchedule:
+        if self.epochs[e] is None:                      # spilled
+            path = os.path.join(self.spill_dir,
+                                f"w{self.worker}_e{e}.pkl")
+            with open(path, "rb") as f:
+                return pickle.load(f)
+        return self.epochs[e]
+
+    @property
+    def m_max(self) -> int:
+        return max(self.epoch(e).m_max for e in range(len(self.epochs)))
+
+
+def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
+                 s0: int, e: int, train_nodes: np.ndarray,
+                 n_hot: int) -> EpochSchedule:
+    batches = sampler.sample_epoch(s0, worker, e, train_nodes)
+    # frequency over the epoch: one count per batch containing the node
+    # (N_i^e is a set -- matches the paper's freq(.) over {B_e})
+    all_remote: List[np.ndarray] = []
+    m_max = 0
+    for b in batches:
+        m_max = max(m_max, b.num_input_nodes)
+        remote = b.input_nodes[pg.owner[b.input_nodes] != worker]
+        all_remote.append(remote)
+    if all_remote:
+        cat = np.concatenate(all_remote)
+        remote_ids, remote_freq = np.unique(cat, return_counts=True)
+    else:
+        remote_ids = np.zeros(0, np.int64)
+        remote_freq = np.zeros(0, np.int64)
+    k = min(n_hot, remote_ids.shape[0])
+    if k > 0:
+        hot = remote_ids[np.argpartition(-remote_freq, k - 1)[:k]]
+        cache_ids = np.sort(hot)
+    else:
+        cache_ids = np.zeros(0, np.int64)
+    return EpochSchedule(epoch=e, batches=batches, remote_ids=remote_ids,
+                         remote_freq=remote_freq, cache_ids=cache_ids,
+                         m_max=m_max)
+
+
+def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
+                   s0: int, num_epochs: int, n_hot: int,
+                   spill_dir: Optional[str] = None) -> WorkerSchedule:
+    """Paper Alg. 1 lines 1-3, for one worker."""
+    local = pg.local_nodes[worker]
+    tm = pg.graph.train_mask
+    train_nodes = local[tm[local]] if tm is not None else local
+    epochs: List[Optional[EpochSchedule]] = []
+    for e in range(num_epochs):
+        es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot)
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+            with open(os.path.join(spill_dir, f"w{worker}_e{e}.pkl"),
+                      "wb") as f:
+                pickle.dump(es, f)
+            epochs.append(None)
+        else:
+            epochs.append(es)
+    return WorkerSchedule(worker=worker, s0=s0, n_hot=n_hot, epochs=epochs,
+                          spill_dir=spill_dir)
+
+
+# ---------------------------------------------------------------------------
+# Padded device-ready collation (XLA static shapes; DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CollatedBatch:
+    """Static-shape batch: every array padded to epoch-level maxima.
+    Padded input-node slots carry id -1 and are masked everywhere."""
+    seeds: np.ndarray          # (B,) int32, -1 padded
+    seed_mask: np.ndarray      # (B,) bool
+    labels: np.ndarray         # (B,) int32
+    input_nodes: np.ndarray    # (m_max,) int64, -1 padded
+    input_mask: np.ndarray     # (m_max,) bool
+    num_inputs: int
+    # per layer: (E_max,) arrays
+    edge_src: List[np.ndarray]
+    edge_dst: List[np.ndarray]
+    edge_mask: List[np.ndarray]
+    num_dst: List[int]         # true dst count per layer (static per batch)
+
+
+def collate(batch: SampledBatch, labels: np.ndarray, batch_size: int,
+            m_max: int, edge_max: Sequence[int]) -> CollatedBatch:
+    b = batch
+    m = b.num_input_nodes
+    inp = np.full(m_max, -1, dtype=np.int64)
+    inp[:m] = b.input_nodes
+    imask = np.zeros(m_max, dtype=bool)
+    imask[:m] = True
+
+    B = b.seeds.shape[0]
+    seeds = np.full(batch_size, -1, dtype=np.int64)
+    seeds[:B] = b.seeds
+    smask = np.zeros(batch_size, dtype=bool)
+    smask[:B] = True
+    lab = np.zeros(batch_size, dtype=np.int32)
+    lab[:B] = labels[b.seeds]
+
+    es, ed, em, ndst = [], [], [], []
+    for l, blk in enumerate(b.blocks):
+        E = blk.edge_src.shape[0]
+        pe = np.zeros(edge_max[l], dtype=np.int32)
+        pd = np.zeros(edge_max[l], dtype=np.int32)
+        pm = np.zeros(edge_max[l], dtype=bool)
+        pe[:E] = blk.edge_src
+        pd[:E] = blk.edge_dst
+        pm[:E] = blk.edge_mask
+        es.append(pe)
+        ed.append(pd)
+        em.append(pm)
+        ndst.append(blk.num_dst)
+    return CollatedBatch(seeds=seeds, seed_mask=smask, labels=lab,
+                         input_nodes=inp, input_mask=imask, num_inputs=m,
+                         edge_src=es, edge_dst=ed, edge_mask=em,
+                         num_dst=ndst)
+
+
+def epoch_edge_maxima(es: EpochSchedule) -> List[int]:
+    L = len(es.batches[0].blocks)
+    return [max(b.blocks[l].edge_src.shape[0] for b in es.batches)
+            for l in range(L)]

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (synthetic_lm_batches, make_batch,
+                                 zipf_tokens, enumerate_token_accesses)
+
+__all__ = ["synthetic_lm_batches", "make_batch", "zipf_tokens",
+           "enumerate_token_accesses"]

@@ -1,0 +1,62 @@
+"""Token data pipeline with RapidGNN-style deterministic scheduling.
+
+The same H(s0, e, i) seed derivation as the graph sampler drives batch
+composition, so the full token-access pattern of a run is enumerable
+offline -- which is what the hot-token embedding cache (embedding.py)
+consumes. Token ids follow a Zipf distribution (natural-language-like
+long tail, the transformer analogue of the paper's Fig. 3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.sampler import rng_from
+from repro.models.transformer.common import ArchConfig
+
+
+def zipf_tokens(rng: np.random.Generator, vocab: int, shape,
+                a: float = 1.1) -> np.ndarray:
+    """Zipf-distributed token ids over [0, vocab)."""
+    ranks = rng.zipf(a, size=shape).astype(np.int64)
+    return ((ranks - 1) % vocab).astype(np.int32)
+
+
+def make_batch(cfg: ArchConfig, rng: np.random.Generator, batch: int,
+               seq: int) -> Dict[str, jnp.ndarray]:
+    toks = zipf_tokens(rng, cfg.vocab_size, (batch, seq))
+    out = {"tokens": jnp.asarray(toks),
+           "labels": jnp.asarray(np.roll(toks, -1, axis=1)),
+           "loss_mask": jnp.ones((batch, seq), jnp.float32)}
+    if cfg.mrope_sections:
+        out["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(seq)[None, None], (3, batch, seq))
+    if cfg.frontend == "vision":
+        out["embeds"] = jnp.asarray(
+            0.02 * rng.standard_normal((batch, seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.kind == "encdec":
+        out["enc_embeds"] = jnp.asarray(
+            0.02 * rng.standard_normal((batch, seq, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+def synthetic_lm_batches(cfg: ArchConfig, batch: int, seq: int, steps: int,
+                         s0: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    for i in range(steps):
+        yield make_batch(cfg, rng_from(s0, 0, i), batch, seq)
+
+
+def enumerate_token_accesses(cfg: ArchConfig, batch: int, seq: int,
+                             steps: int, s0: int = 0) -> np.ndarray:
+    """Offline enumeration of the token-id access counts for a whole run
+    (paper Alg. 1 lines 1-3 applied to the embedding table)."""
+    counts = np.zeros(cfg.vocab_size, np.int64)
+    for i in range(steps):
+        toks = zipf_tokens(rng_from(s0, 0, i), cfg.vocab_size,
+                           (batch, seq))
+        counts += np.bincount(toks.reshape(-1), minlength=cfg.vocab_size)
+    return counts

@@ -1,0 +1,11 @@
+"""Graph substrate: CSR storage, synthetic datasets, partitioning, sampling."""
+from repro.graph.graph import Graph
+from repro.graph.generate import make_powerlaw_graph, DATASETS, load_dataset
+from repro.graph.partition import random_partition, greedy_partition, PartitionedGraph, partition_graph
+from repro.graph.sampler import KHopSampler, SampledBatch
+
+__all__ = [
+    "Graph", "make_powerlaw_graph", "DATASETS", "load_dataset",
+    "random_partition", "greedy_partition", "PartitionedGraph", "partition_graph",
+    "KHopSampler", "SampledBatch",
+]

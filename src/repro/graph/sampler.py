@@ -1,0 +1,133 @@
+"""Deterministic K-hop neighbor sampler (paper §3, §4 components 1-3).
+
+Seeds: ``s_{e,i}^{(w)} = H(s0, w, e, i)`` with H = BLAKE2b (a cryptographic
+hash, exactly as the paper specifies). Distinct (w, e, i) tuples hash to
+independent uniform 64-bit values seeding non-overlapping Philox streams,
+which gives Proposition 3.1 (a)-(c): marginal law identical to an online
+uniform draw, independence across tuples, unbiased gradients.
+
+The sampler emits MFG-style blocks (DGL convention): for each GNN layer,
+``dst`` nodes are a prefix of ``src`` nodes; edges are (src_idx, dst_idx)
+pairs indexing the per-layer node arrays. Only METADATA is produced here
+(ids / offsets / locality) -- features are materialized later by the
+cache/prefetch machinery, mirroring the paper's sampler->prefetcher split.
+
+Neighbors are drawn uniformly WITH replacement (fan-out F per node), which
+keeps per-layer edge counts static (num_dst x F) -- the shape-static form
+XLA needs -- while preserving the uniform marginal Prop 3.1 relies on.
+Zero-degree nodes contribute masked edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.graph.graph import Graph
+
+
+def derive_seed(s0: int, *fields: int) -> int:
+    """H(s0, w, e, i, ...) -> uint64, H = BLAKE2b-8."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(struct.pack("<q", s0))
+    for f in fields:
+        h.update(struct.pack("<q", int(f)))
+    return struct.unpack("<Q", h.digest())[0]
+
+
+def rng_from(s0: int, *fields: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.Philox(derive_seed(s0, *fields)))
+
+
+@dataclasses.dataclass
+class Block:
+    """One message-passing layer: edges src->dst.
+
+    src nodes of the layer are ``input_nodes[:num_src]`` of the parent
+    batch at that depth; dst nodes are the prefix ``[:num_dst]``.
+    """
+    num_src: int
+    num_dst: int
+    edge_src: np.ndarray     # (E,) int32 local idx into layer src array
+    edge_dst: np.ndarray     # (E,) int32 local idx into layer dst array
+    edge_mask: np.ndarray    # (E,) bool  False for zero-degree padding
+
+
+@dataclasses.dataclass
+class SampledBatch:
+    epoch: int
+    index: int
+    worker: int
+    seeds: np.ndarray         # (B,) int64 global ids (dst of last layer)
+    input_nodes: np.ndarray   # (m,) int64 global ids, dst-prefix ordering
+    blocks: List[Block]       # ordered input-layer -> output-layer
+
+    @property
+    def num_input_nodes(self) -> int:
+        return int(self.input_nodes.shape[0])
+
+
+class KHopSampler:
+    def __init__(self, graph: Graph, fanouts: Sequence[int],
+                 batch_size: int):
+        self.graph = graph
+        self.fanouts = list(fanouts)     # fanouts[l] for layer l (input->output)
+        self.batch_size = batch_size
+
+    # ---- batch enumeration (deterministic shuffle per worker/epoch) ----
+    def epoch_seed_batches(self, s0: int, worker: int, epoch: int,
+                           train_nodes: np.ndarray) -> List[np.ndarray]:
+        rng = rng_from(s0, worker, epoch, -1)   # i=-1 : the shuffle stream
+        perm = rng.permutation(train_nodes)
+        nb = int(np.ceil(perm.shape[0] / self.batch_size))
+        return [perm[i * self.batch_size:(i + 1) * self.batch_size]
+                for i in range(nb)]
+
+    # ---- one batch ----
+    def sample_batch(self, s0: int, worker: int, epoch: int, index: int,
+                     seed_nodes: np.ndarray) -> SampledBatch:
+        g = self.graph
+        rng = rng_from(s0, worker, epoch, index)
+        cur = np.asarray(seed_nodes, dtype=np.int64)
+        blocks_rev: List[Block] = []
+        # walk output layer -> input layer
+        for fanout in reversed(self.fanouts):
+            deg = (g.indptr[cur + 1] - g.indptr[cur]).astype(np.int64)
+            nd = cur.shape[0]
+            offs = rng.integers(0, np.maximum(deg, 1)[:, None],
+                                size=(nd, fanout))
+            src_pos = g.indptr[cur][:, None] + offs
+            src = g.indices[np.minimum(src_pos, g.num_edges - 1)].astype(np.int64)
+            mask = np.broadcast_to((deg > 0)[:, None], (nd, fanout)).reshape(-1)
+            src_flat = src.reshape(-1)
+            dst_idx = np.repeat(np.arange(nd, dtype=np.int32), fanout)
+            # masked (zero-degree) edges self-loop onto their dst so their
+            # src id is always present in the node array
+            src_flat = np.where(mask, src_flat, cur[dst_idx])
+
+            # src node array = dst prefix + new unique sources
+            uniq = np.unique(src_flat)
+            extra = np.setdiff1d(uniq, cur, assume_unique=False)
+            src_nodes = np.concatenate([cur, extra])
+            sorter = np.argsort(src_nodes, kind="stable")
+            src_idx = sorter[np.searchsorted(src_nodes, src_flat,
+                                             sorter=sorter)].astype(np.int32)
+            blocks_rev.append(Block(num_src=src_nodes.shape[0], num_dst=nd,
+                                    edge_src=src_idx, edge_dst=dst_idx,
+                                    edge_mask=mask))
+            cur = src_nodes
+        blocks = list(reversed(blocks_rev))
+        return SampledBatch(epoch=epoch, index=index, worker=worker,
+                            seeds=np.asarray(seed_nodes, dtype=np.int64),
+                            input_nodes=cur, blocks=blocks)
+
+    def sample_epoch(self, s0: int, worker: int, epoch: int,
+                     train_nodes: np.ndarray) -> List[SampledBatch]:
+        out = []
+        for i, seeds in enumerate(
+                self.epoch_seed_batches(s0, worker, epoch, train_nodes)):
+            out.append(self.sample_batch(s0, worker, epoch, i, seeds))
+        return out

@@ -1,0 +1,109 @@
+"""Pallas TPU kernels for the device-resident steady cache C_s.
+
+Two fused stages (DESIGN.md §3 kernels):
+
+  1. ``search``  -- positions of queries in the SORTED cache-id vector.
+     TPU adaptation: instead of a per-lane binary search (serial, gather-
+     heavy), each (Tq x Tc) tile computes comparison-mask partial sums on
+     the VPU:  pos(q) = #&#123;ids < q&#125;,  hit(q) = any(ids == q).  The cache-id
+     vector streams through VMEM in Tc-sized tiles, so n_hot is unbounded
+     by VMEM and every op is dense vector work (MXU/VPU aligned).
+  2. ``merge_gather`` -- one cached feature row per grid step, selected by
+     a scalar-prefetched BlockSpec index map, merged over the pre-filled
+     base buffer (hits win, misses keep the SyncPull value).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_TQ = 256
+DEFAULT_TC = 1024
+
+
+def _search_kernel(q_ref, ids_ref, pos_ref, hit_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    q = q_ref[...]                     # (Tq,)
+    ids = ids_ref[...]                 # (Tc,)
+    lt = (ids[None, :] < q[:, None])
+    eq = (ids[None, :] == q[:, None])
+    pos_ref[...] += lt.sum(axis=1).astype(jnp.int32)
+    hit_ref[...] |= eq.any(axis=1)
+
+
+def search(cache_ids: jax.Array, query: jax.Array, tq: int = DEFAULT_TQ,
+           tc: int = DEFAULT_TC, interpret: bool = False
+           ) -> Tuple[jax.Array, jax.Array]:
+    """cache_ids (n_hot,) sorted int32; query (m,) int32 -> (pos, hit)."""
+    m = query.shape[0]
+    n_hot = cache_ids.shape[0]
+    tq = min(tq, m)
+    tc = min(tc, n_hot)
+    assert m % tq == 0 and n_hot % tc == 0, (m, tq, n_hot, tc)
+    grid = (m // tq, n_hot // tc)
+    pos, hit = pl.pallas_call(
+        _search_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tq,), lambda i, j: (i,)),
+                  pl.BlockSpec((tc,), lambda i, j: (j,))],
+        out_specs=[pl.BlockSpec((tq,), lambda i, j: (i,)),
+                   pl.BlockSpec((tq,), lambda i, j: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
+                   jax.ShapeDtypeStruct((m,), jnp.bool_)],
+        interpret=interpret,
+    )(query, cache_ids)
+    return pos, hit
+
+
+def _merge_kernel(pos, hit, feats_ref, base_ref, o_ref):
+    i = pl.program_id(0)
+    h = hit[i]
+    f = feats_ref[...].astype(o_ref.dtype)
+    b = base_ref[...]
+    o_ref[...] = jnp.where(h, f, b)
+
+
+def merge_gather(cache_feats: jax.Array, base: jax.Array, pos: jax.Array,
+                 hit: jax.Array, d_tile: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """base (m, d) pre-filled buffer; cached rows win where hit."""
+    m, d = base.shape
+    dt = min(d, d_tile)
+    assert d % dt == 0
+    n_hot = cache_feats.shape[0]
+    pos_c = jnp.minimum(pos, n_hot - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,         # pos, hit
+        grid=(m, d // dt),
+        in_specs=[
+            pl.BlockSpec((1, dt), lambda i, k, p, h: (p[i], k)),
+            pl.BlockSpec((1, dt), lambda i, k, p, h: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((1, dt), lambda i, k, p, h: (i, k)),
+    )
+    return pl.pallas_call(
+        _merge_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), base.dtype),
+        interpret=interpret,
+    )(pos_c, hit, cache_feats, base)
+
+
+def cache_lookup(cache_ids: jax.Array, cache_feats: jax.Array,
+                 query: jax.Array, base: jax.Array,
+                 interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    pos, hit = search(cache_ids, query, interpret=interpret)
+    merged = merge_gather(cache_feats, base, pos, hit, interpret=interpret)
+    return merged, hit

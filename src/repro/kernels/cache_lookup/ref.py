@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the steady-cache lookup (C_s hit resolution)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def cache_lookup_ref(cache_ids: jnp.ndarray, cache_feats: jnp.ndarray,
+                     query: jnp.ndarray, base: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cache_ids (n_hot,) sorted (padded with a huge sentinel);
+    cache_feats (n_hot, d); query (m,); base (m, d) pre-filled buffer.
+    -> (merged (m, d), hit (m,) bool)."""
+    n_hot = cache_ids.shape[0]
+    pos = jnp.searchsorted(cache_ids, query)
+    pos_c = jnp.minimum(pos, max(n_hot - 1, 0))
+    hit = (cache_ids[pos_c] == query) & (query >= 0)
+    vals = cache_feats[pos_c]
+    merged = jnp.where(hit[:, None], vals.astype(base.dtype), base)
+    return merged, hit

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the training flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _kernel)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "use_kernel", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, use_kernel: bool = False,
+                    interpret: bool = False) -> jax.Array:
+    if use_kernel:
+        return _kernel(q, k, v, causal=causal, window=window,
+                       softcap=softcap, interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)

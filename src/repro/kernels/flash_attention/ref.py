@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the training/prefill flash-attention kernel:
+the chunked online-softmax attention from the model substrate (itself
+validated against naive attention in tests/test_transformer_units.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.transformer.attention import attention
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q (B,S,H,dh); k/v (B,S,kvH,dh) -> (B,S,H,dh)."""
+    return attention(q, k, v, causal=causal, window=window,
+                     attn_softcap=softcap)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: single-token flash-decode attention over a KV tile.
+
+Serving hot spot for decode_32k / long_500k: one query token attends to a
+(possibly sequence-sharded) KV cache. Online-softmax accumulation over
+S-tiles keeps VMEM usage at  O(T_s * dh)  per kv head regardless of cache
+length; the kernel emits UNNORMALIZED (acc, m, l) partials so the serving
+layer can psum-combine across a `model`-axis sequence-sharded cache
+(repro/serve/attention.py) -- that combine is what makes 500k-token caches
+fit a v5e (DESIGN.md §5).
+
+Grid: (kvH, S // T_s); the full query head-group for a kv head lives in
+one block. Scratch carries (m, l, acc) across the sequence tiles; softcap
+(gemma2) and sliding-window start offsets are supported via scalars.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TS = 512
+
+
+def _kernel(meta, q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+            m_s, l_s, acc_s, *, ts: int, scale: float, softcap: float,
+            num_tiles: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, dh)
+    k = k_ref[:, 0].astype(jnp.float32)       # (Ts, dh)
+    v = v_ref[:, 0].astype(jnp.float32)       # (Ts, dh)
+
+    s = (q * scale) @ k.T                     # (G, Ts)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = t * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
+    valid = (pos < meta[0]) & (pos >= meta[1])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_s[...]                         # (G, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    p = jnp.where(valid, p, 0.0)
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + p @ v
+    m_s[...] = m_cur
+
+    @pl.when(t == num_tiles - 1)
+    def _finish():
+        acc_ref[0] = acc_s[...].astype(acc_ref.dtype)
+        m_ref[0] = m_s[..., 0].astype(m_ref.dtype)
+        l_ref[0] = l_s[..., 0].astype(l_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: jax.Array, start: jax.Array | None = None,
+                 scale: float | None = None, softcap: float = 0.0,
+                 ts: int = DEFAULT_TS, interpret: bool = False
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q (H, dh); k/v (S, kvH, dh) -> (acc (H, dh), m (H,), l (H,))."""
+    H, dh = q.shape
+    S, kvH, _ = k.shape
+    group = H // kvH
+    ts = min(ts, S)
+    assert S % ts == 0, (S, ts)
+    scale = scale if scale is not None else dh ** -0.5
+    num_tiles = S // ts
+
+    meta = jnp.stack([length.astype(jnp.int32),
+                      (start if start is not None
+                       else jnp.zeros((), jnp.int32)).astype(jnp.int32)])
+    qg = q.reshape(kvH, group, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,        # meta = [length, start]
+        grid=(kvH, num_tiles),
+        in_specs=[
+            pl.BlockSpec((1, group, dh), lambda h, t, meta: (h, 0, 0)),
+            pl.BlockSpec((ts, 1, dh), lambda h, t, meta: (t, h, 0)),
+            pl.BlockSpec((ts, 1, dh), lambda h, t, meta: (t, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, dh), lambda h, t, meta: (h, 0, 0)),
+            pl.BlockSpec((1, group), lambda h, t, meta: (h, 0)),
+            pl.BlockSpec((1, group), lambda h, t, meta: (h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        functools.partial(_kernel, ts=ts, scale=scale, softcap=softcap,
+                          num_tiles=num_tiles),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((kvH, group, dh), jnp.float32),
+                   jax.ShapeDtypeStruct((kvH, group), jnp.float32),
+                   jax.ShapeDtypeStruct((kvH, group), jnp.float32)],
+        interpret=interpret,
+    )(meta, qg, k, v)
+    return acc.reshape(H, dh), m.reshape(H), l.reshape(H)

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for flash_decode (+ batch vmap + shard combine)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import flash_decode as _kernel
+from repro.kernels.flash_decode.ref import (flash_decode_ref, finalize,
+                                            combine)
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "use_kernel",
+                                   "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: jax.Array, start: jax.Array | None = None, *,
+                 scale: float | None = None, softcap: float = 0.0,
+                 use_kernel: bool = False, interpret: bool = False
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-element partials; see ref.py for the (acc, m, l) contract."""
+    if use_kernel:
+        return _kernel(q, k, v, length, start=start, scale=scale,
+                       softcap=softcap, interpret=interpret)
+    return flash_decode_ref(q, k, v, length, scale=scale, softcap=softcap,
+                            start=start)
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "use_kernel",
+                                   "interpret"))
+def flash_decode_batched(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array, start: jax.Array | None = None,
+                         *, scale: float | None = None, softcap: float = 0.0,
+                         use_kernel: bool = False,
+                         interpret: bool = False) -> jax.Array:
+    """q (B, H, dh); k/v (B, S, kvH, dh); length/start (B,) -> (B, H, dh)."""
+    fn = partial(flash_decode, scale=scale, softcap=softcap,
+                 use_kernel=use_kernel, interpret=interpret)
+    if start is None:
+        acc, m, l = jax.vmap(lambda qq, kk, vv, ln: fn(qq, kk, vv, ln))(
+            q, k, v, length)
+    else:
+        acc, m, l = jax.vmap(fn)(q, k, v, length, start)
+    return jax.vmap(finalize)(acc, l)
+
+
+__all__ = ["flash_decode", "flash_decode_batched", "finalize", "combine"]

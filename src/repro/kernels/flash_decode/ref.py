@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for single-token flash-decode attention.
+
+Returns UNNORMALIZED partials (acc, m, l) so shard-level results can be
+combined across a sequence-sharded KV cache:
+  acc = sum_s exp(q.k_s - m) v_s,   l = sum_s exp(q.k_s - m),
+  m   = max_s q.k_s  (masked positions excluded).
+Final output = acc / l. GQA: q head h reads kv head h // (H // kvH).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray, scale: float | None = None,
+                     softcap: float = 0.0,
+                     start: jnp.ndarray | None = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """q (H, dh); k/v (S, kvH, dh); length scalar = #valid positions;
+    start scalar = first valid position (sliding window) -> (acc, m, l)."""
+    H, dh = q.shape
+    S, kvH, _ = k.shape
+    group = H // kvH
+    scale = scale if scale is not None else dh ** -0.5
+    kk = jnp.repeat(k, group, axis=1)      # (S, H, dh)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("hd,shd->sh", q * scale, kk.astype(q.dtype))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)
+    valid = pos < length
+    if start is not None:
+        valid &= pos >= start
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=0)                               # (H,)
+    p = jnp.exp(s - m[None, :])
+    p = jnp.where(valid[:, None], p, 0.0)
+    l = jnp.sum(p, axis=0)                               # (H,)
+    acc = jnp.einsum("sh,shd->hd", p, vv.astype(p.dtype))
+    return acc, m, l
+
+
+def finalize(acc: jnp.ndarray, l: jnp.ndarray) -> jnp.ndarray:
+    return acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def combine(parts):
+    """Combine per-shard (acc, m, l) partials -> (acc, m, l) global."""
+    accs, ms, ls = zip(*parts)
+    m_g = jnp.max(jnp.stack(ms), axis=0)
+    acc_g = sum(a * jnp.exp(m - m_g)[:, None] for a, m in zip(accs, ms))
+    l_g = sum(l * jnp.exp(m - m_g) for l, m in zip(ls, ms))
+    return acc_g, m_g, l_g

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the gather_agg kernel.
+
+On CPU (or when ``use_kernel=False``) dispatches to the jnp oracle; on TPU
+it runs the Pallas kernel. ``interpret=True`` executes the kernel body in
+Python on CPU -- the validation mode the tests sweep.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_agg.gather_agg import gather_agg as _kernel_call
+from repro.kernels.gather_agg.ref import gather_agg_ref
+
+
+@partial(jax.jit, static_argnames=("nd", "fanout", "use_kernel",
+                                   "interpret"))
+def gather_agg(h: jax.Array, edge_src: jax.Array, edge_mask: jax.Array,
+               *, nd: int, fanout: int, use_kernel: bool = False,
+               interpret: bool = False) -> jax.Array:
+    if use_kernel:
+        return _kernel_call(h, edge_src, edge_mask, nd, fanout,
+                            interpret=interpret)
+    return gather_agg_ref(h, edge_src, edge_mask, nd, fanout)

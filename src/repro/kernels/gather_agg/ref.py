@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused gather + neighbor-mean aggregation.
+
+Fan-out-regular layout (the deterministic sampler's invariant): edges are
+dst-major, exactly ``fanout`` edges per dst node, so
+``edge_src.reshape(nd, fanout)`` and no scatter is ever needed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_agg_ref(h: jnp.ndarray, edge_src: jnp.ndarray,
+                   edge_mask: jnp.ndarray, nd: int,
+                   fanout: int) -> jnp.ndarray:
+    """h (m, d); edge_src/mask (nd*fanout,) dst-major -> (nd, d) mean."""
+    src = edge_src.reshape(nd, fanout)
+    msk = edge_mask.reshape(nd, fanout).astype(h.dtype)
+    gathered = h[src] * msk[..., None]            # (nd, fanout, d)
+    s = gathered.sum(axis=1)
+    cnt = jnp.maximum(msk.sum(axis=1), 1.0)
+    return s / cnt[:, None]

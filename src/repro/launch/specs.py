@@ -1,0 +1,169 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch x shape) combo.
+
+Nothing here allocates device memory: parameters/optimizer/caches come
+from ``jax.eval_shape`` and batches are ShapeDtypeStructs. The dry-run
+lowers + compiles against these (assignment MULTI-POD DRY-RUN step 2).
+
+Frontend stubs: [audio] provides ``enc_embeds`` (B, S_src, d) frame
+embeddings; [vlm] provides ``embeds`` (B, S, d) patch embeddings plus
+M-RoPE position streams (3, B, S).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, INPUT_SHAPES, SUBQUADRATIC,
+                           get_arch)
+from repro.models.transformer import (init_params, init_decode_state,
+                                      lm_loss, serve_step, forward, encode)
+from repro.models.transformer.common import ArchConfig
+from repro.train.optim import AdamW
+from repro.dist.shardings import (param_shardings, opt_shardings,
+                                  batch_shardings, decode_state_shardings)
+
+#: window for the sliding-window long_500k variant on full-attention archs
+LONG_WINDOW = 8_192
+#: encoder/cross source length for enc-dec decode shapes
+SRC_LEN = 4_096
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    arch: str
+    shape: str
+    fn: Callable                    # python callable to jit
+    args: Tuple[Any, ...]           # ShapeDtypeStruct trees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _eval_params(cfg: ArchConfig):
+    return jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+
+
+def train_batch_specs(cfg: ArchConfig, B: int, S: int):
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S),
+                                                        jnp.int32)
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)
+    if cfg.kind == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)
+    return batch
+
+
+def cost_variant_cfg(cfg: ArchConfig, r: int, S: int) -> ArchConfig:
+    """Small UNROLLED variant for roofline cost measurement: r repeats of
+    the pattern, single-chunk attention (no scan bodies anywhere XLA's
+    cost analysis would count only once)."""
+    changes = dict(num_layers=len(cfg.pattern) * r, unroll_layers=True,
+                   attn_q_chunk=S, attn_kv_chunk=S)
+    if cfg.kind == "encdec":
+        changes["num_enc_layers"] = r
+    return dataclasses.replace(cfg, **changes)
+
+
+def make_dryrun_spec(arch: str, shape: str, mesh,
+                     optimizer: Optional[AdamW] = None,
+                     cfg: Optional[ArchConfig] = None,
+                     S: Optional[int] = None,
+                     B: Optional[int] = None) -> DryRunSpec:
+    cfg = cfg or get_arch(arch)
+    S_d, B_d, kind = INPUT_SHAPES[shape]
+    S = S or S_d
+    B = B or B_d
+    optimizer = optimizer or AdamW(lr=1e-4, weight_decay=0.01,
+                                   max_grad_norm=1.0)
+    params_s = _eval_params(cfg)
+    params_sh = param_shardings(cfg, mesh, params_s)
+    meta: Dict[str, Any] = {"cfg": cfg, "seq": S, "batch": B, "kind": kind}
+
+    if kind == "train":
+        opt_s = jax.eval_shape(optimizer.init, params_s)
+        opt_sh = opt_shardings(params_sh, opt_s)
+        batch_s = train_batch_specs(cfg, B, S)
+        batch_sh = batch_shardings(cfg, mesh, batch_s)
+
+        def train_step(params, opt_state, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                partial(lm_loss, cfg, mesh=mesh), has_aux=True)(params,
+                                                                batch)
+            p2, o2 = optimizer.update(grads, opt_state, params)
+            return p2, o2, loss
+
+        return DryRunSpec(arch, shape, train_step,
+                          (params_s, opt_s, batch_s),
+                          (params_sh, opt_sh, batch_sh),
+                          (params_sh, opt_sh, None), meta)
+
+    if kind == "prefill":
+        batch_s = train_batch_specs(cfg, B, S)
+        batch_s.pop("labels")
+        batch_s.pop("loss_mask")
+        batch_sh = batch_shardings(cfg, mesh, batch_s)
+
+        def prefill_step(params, batch):
+            enc_out = (encode(cfg, params, batch["enc_embeds"])
+                       if cfg.kind == "encdec" else None)
+            logits = forward(cfg, params, batch["tokens"],
+                             mrope_positions=batch.get("mrope_positions"),
+                             embeds=batch.get("embeds"), enc_out=enc_out,
+                             mesh=mesh)
+            return logits[:, -1]          # next-token logits
+
+        return DryRunSpec(arch, shape, prefill_step, (params_s, batch_s),
+                          (params_sh, batch_sh), None, meta)
+
+    # ---- decode ----
+    window_override = 0
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        window_override = LONG_WINDOW
+        meta["attn_variant"] = "sliding_window"
+    src_len = SRC_LEN if cfg.kind == "encdec" else 0
+    state_s = jax.eval_shape(
+        partial(init_decode_state, cfg, B, S,
+                window_override=window_override, src_len=src_len))
+    state_sh = decode_state_shardings(cfg, mesh, state_s)
+    tok_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.mesh import dp_axes
+    from repro.dist.shardings import fit_spec
+    dp = dp_axes(mesh)
+    tok_sh = NamedSharding(mesh, fit_spec(mesh, P(dp, None), (B, 1)))
+    pos_sh = NamedSharding(mesh, fit_spec(mesh, P(dp), (B,)))
+    mrope = None
+    if cfg.mrope_sections:
+        mrope = jax.ShapeDtypeStruct((3, B, 1), jnp.int32)
+
+    def decode_step(params, states, tokens, pos, mrope_positions=None):
+        return serve_step(cfg, params, states, tokens, pos,
+                          mrope_positions=mrope_positions, mesh=mesh,
+                          window_override=window_override)
+
+    args = (params_s, state_s, tok_s, pos_s)
+    in_sh = (params_sh, state_sh, tok_sh, pos_sh)
+    if mrope is not None:
+        args = args + (mrope,)
+        in_sh = in_sh + (NamedSharding(
+            mesh, fit_spec(mesh, P(None, dp, None), (3, B, 1))),)
+    return DryRunSpec(arch, shape, decode_step, args, in_sh,
+                      (None, state_sh), meta)

@@ -1,0 +1,5 @@
+from repro.models.gnn import (GNNConfig, init_params, forward, loss_fn,
+                              make_train_step, batch_to_device)
+
+__all__ = ["GNNConfig", "init_params", "forward", "loss_fn",
+           "make_train_step", "batch_to_device"]

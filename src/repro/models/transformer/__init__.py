@@ -1,0 +1,7 @@
+from repro.models.transformer.common import ArchConfig
+from repro.models.transformer.model import (init_params, forward, encode,
+                                            lm_loss, make_train_step,
+                                            init_decode_state, serve_step)
+
+__all__ = ["ArchConfig", "init_params", "forward", "encode", "lm_loss",
+           "make_train_step", "init_decode_state", "serve_step"]

@@ -1,0 +1,161 @@
+"""Training/prefill attention: chunked online-softmax (flash-style) in jnp.
+
+Memory is O(S * q_chunk) instead of O(S^2), which is what lets the
+train_4k / prefill_32k dry-runs fit HBM (the (B,H,S,S) score tensor of a
+naive implementation would be TBs at 32k). Sliding-window ("local")
+layers attend over a dynamically-sliced KV *band* so the compiled FLOPs
+reflect the sub-quadratic cost (roofline honesty), not just a mask.
+
+GQA is computed in grouped form -- q is reshaped to (B, S, kvH, G, dh) and
+k/v are never repeated to H heads.
+
+NOTE on HLO FLOPs: full-causal attention computes the full (S x S)
+rectangle and masks; compiled FLOPs are ~2x the causal triangle. The
+roofline analysis corrects for this via the MODEL_FLOPS ratio
+(EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _online_update(carry, s, v_chunk, valid):
+    m, l, acc = carry
+    s = jnp.where(valid, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = (acc * alpha[..., None] +
+               jnp.einsum("bhgqk,bkhd->bhgqd", p, v_chunk))
+    return m_new, l_new, acc_new
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0,
+              attn_softcap: float = 0.0, q_chunk: int = 512,
+              kv_chunk: int = 1024, scale: Optional[float] = None,
+              q_offset: int = 0) -> jnp.ndarray:
+    """q (B,Sq,H,dh); k/v (B,Skv,kvH,dh) -> (B,Sq,H,dh).
+
+    ``q_offset`` is the absolute position of q[0] (cross-chunk prefill).
+    ``window > 0`` restricts attention to the last `window` positions
+    (inclusive of self) and switches to banded compute.
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, kvH, _ = k.shape
+    G = H // kvH
+    scale = scale if scale is not None else dh ** -0.5
+    qg = (q * scale).reshape(B, Sq, kvH, G, dh)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+
+    if window > 0:
+        return _banded(qg, k, v, window=window, attn_softcap=attn_softcap,
+                       q_chunk=q_chunk, q_offset=q_offset).reshape(
+                           B, Sq, H, dh)
+
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    def q_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 1)
+        qb = jnp.moveaxis(qb, 1, 3)            # (B,kvH,G,Tq,dh)
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, j):
+            kb = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bhgqd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32))
+            s = _softcap(s, attn_softcap)
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            valid = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                valid = kpos[None, :] <= qpos[:, None]
+            return _online_update(carry, s, vb.astype(jnp.float32),
+                                  valid[None, None, None]), None
+
+        init = (jnp.full((B, kvH, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, kvH, G, q_chunk), jnp.float32),
+                jnp.zeros((B, kvH, G, q_chunk, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)          # (B,Tq,kvH,G,dh)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))   # (nq,B,Tq,kvH,G,dh)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, kvH, G, dh)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _banded(qg, k, v, *, window, attn_softcap, q_chunk, q_offset):
+    """Sliding-window attention over a dynamically sliced KV band."""
+    B, Sq, kvH, G, dh = qg.shape
+    Skv = k.shape[1]
+    band = window + q_chunk            # covers all positions a chunk needs
+    band = min(band, Skv)
+    nq = Sq // q_chunk
+
+    def q_block(i):
+        qb = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 1),
+            1, 3)                                   # (B,kvH,G,Tq,dh)
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        # kv band start (absolute index into the kv array)
+        start = jnp.clip(q_offset + i * q_chunk + q_chunk - band, 0,
+                         Skv - band)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, 1)
+        s = jnp.einsum("bhgqd,bkhd->bhgqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32))
+        s = _softcap(s, attn_softcap)
+        kpos = start + jnp.arange(band)
+        valid = ((kpos[None, :] <= qpos[:, None]) &
+                 (kpos[None, :] > qpos[:, None] - window))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                         vb.astype(jnp.float32))
+        out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)              # (B,Tq,kvH,G,dh)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, kvH, G, dh)
+    return out.astype(k.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length: jnp.ndarray, *,
+                     window: int = 0, attn_softcap: float = 0.0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token decode: q (B,1,H,dh); caches (B,S,kvH,dh); length (B,).
+
+    jnp path (CPU/oracle). The TPU path with a sequence-sharded cache is
+    repro.serve.attention.sharded_decode_attention, built on the
+    flash_decode Pallas kernel.
+    """
+    from repro.kernels.flash_decode.ops import flash_decode
+    from repro.kernels.flash_decode.ref import finalize
+    B, _, H, dh = q.shape
+
+    def one(qi, ki, vi, ln):
+        start = (jnp.maximum(ln - window, 0) if window > 0
+                 else jnp.zeros((), jnp.int32))
+        acc, m, l = flash_decode(qi, ki, vi, ln, start.astype(jnp.int32),
+                                 scale=scale, softcap=attn_softcap)
+        return finalize(acc, l)
+
+    out = jax.vmap(one)(q[:, 0], k_cache, v_cache, length)
+    return out[:, None].astype(q.dtype)

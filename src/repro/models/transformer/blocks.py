@@ -1,0 +1,259 @@
+"""Block-level init/apply for every layer kind: attn/local, ssm, rglru.
+
+Each block = mixer + (FFN | MoE | nothing-for-ssm), pre-norm residual
+(+ optional gemma2 sandwich post-norms). Parameters for one *pattern
+position* are stacked over the repeat dimension R and scanned in
+model.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import (ArchConfig, apply_mrope,
+                                             apply_rope, dense_init,
+                                             rms_norm, softcap)
+from repro.models.transformer.attention import attention, decode_attention
+from repro.models.transformer.moe import init_moe_params, moe_apply
+from repro.models.transformer.ssm import (init_ssm_params, ssm_forward,
+                                          ssm_decode_step)
+from repro.models.transformer.rglru import (init_rglru_params,
+                                            rglru_forward,
+                                            rglru_decode_step)
+
+
+# --------------------------------------------------------------- init ----
+
+def init_attn_params(cfg: ArchConfig, key: jax.Array, dtype,
+                     cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), 0, dtype),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), 0, dtype),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), 0, dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), 0, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def init_ffn_params(cfg: ArchConfig, key: jax.Array, dtype,
+                    d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": dense_init(k1, (d, ff), 0, dtype),
+            "w3": dense_init(k2, (d, ff), 0, dtype),
+            "w2": dense_init(k3, (ff, d), 0, dtype)}
+
+
+def init_block_params(cfg: ArchConfig, kind: str, key: jax.Array, dtype,
+                      with_cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), dtype)}
+    if kind in ("attn", "local"):
+        p["attn"] = init_attn_params(cfg, ks[0], dtype)
+    elif kind == "ssm":
+        p["ssm"] = init_ssm_params(cfg, ks[0], dtype)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru_params(cfg, ks[0], dtype)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((d,), dtype)
+    if with_cross:
+        p["ln_x"] = jnp.zeros((d,), dtype)
+        p["xattn"] = init_attn_params(cfg, ks[1], dtype, cross=True)
+    if kind != "ssm":
+        p["ln2"] = jnp.zeros((d,), dtype)
+        if cfg.moe:
+            p["moe"] = init_moe_params(cfg, ks[2], dtype)
+            if cfg.dense_residual:
+                p["ffn"] = init_ffn_params(cfg, ks[3], dtype)
+        else:
+            p["ffn"] = init_ffn_params(cfg, ks[3], dtype)
+        if cfg.post_norms:
+            p["ln2_post"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# -------------------------------------------------------------- apply ----
+
+def _project_qkv(cfg: ArchConfig, p, h, positions, mrope_positions):
+    B, S, _ = h.shape
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if "bq" in p:
+        q, k, v = (q + p["bq"].astype(h.dtype), k + p["bk"].astype(h.dtype),
+                   v + p["bv"].astype(h.dtype))
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def ffn_apply(cfg: ArchConfig, p, h):
+    act = cfg.activation()
+    return (act(h @ p["w1"].astype(h.dtype)) * (h @ p["w3"].astype(h.dtype))
+            ) @ p["w2"].astype(h.dtype)
+
+
+def mixer_ffn(cfg: ArchConfig, p, x, mesh):
+    """The FFN/MoE half of a block (shared by train & decode paths)."""
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        out = moe_apply(p["moe"], h2, cfg, mesh=mesh)
+        if cfg.dense_residual:
+            out = out + ffn_apply(cfg, p["ffn"], h2)
+    else:
+        out = ffn_apply(cfg, p["ffn"], h2)
+    if cfg.post_norms:
+        out = rms_norm(out, p["ln2_post"], cfg.norm_eps)
+    return x + out
+
+
+def block_apply(cfg: ArchConfig, kind: str, p, x, *, positions=None,
+                mrope_positions=None, enc_out=None, mesh=None,
+                causal: bool = True):
+    """Training/prefill forward for one block. x (B,S,d)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        q, k, v = _project_qkv(cfg, p["attn"], h, positions,
+                               mrope_positions)
+        window = cfg.window if kind == "local" else 0
+        if cfg.seq_shard_attn and mesh is not None and \
+                mesh.shape.get("model", 1) > 1:
+            # sequence-parallel attention: q rows sharded over `model`,
+            # k/v replicated (GSPMD inserts the allgather). Per-device
+            # score work becomes S/tp x S regardless of head count.
+            from jax.sharding import PartitionSpec as SP
+            from repro.dist.mesh import dp_axes
+            dp = dp_axes(mesh)
+            q = jax.lax.with_sharding_constraint(
+                q, jax.sharding.NamedSharding(
+                    mesh, SP(dp, "model", None, None)))
+            k = jax.lax.with_sharding_constraint(
+                k, jax.sharding.NamedSharding(mesh, SP(dp, None, None,
+                                                       None)))
+            v = jax.lax.with_sharding_constraint(
+                v, jax.sharding.NamedSharding(mesh, SP(dp, None, None,
+                                                       None)))
+        o = attention(q, k, v, causal=causal, window=window,
+                      attn_softcap=cfg.attn_softcap,
+                      q_chunk=cfg.attn_q_chunk,
+                      kv_chunk=cfg.attn_kv_chunk)
+        o = o.reshape(*x.shape[:2], cfg.q_dim) @ p["attn"]["wo"].astype(
+            x.dtype)
+    elif kind == "ssm":
+        o = ssm_forward(p["ssm"], h, cfg)
+    elif kind == "rglru":
+        o = rglru_forward(p["rglru"], h, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        o = rms_norm(o, p["ln1_post"], cfg.norm_eps)
+    x = x + o
+
+    if enc_out is not None and "xattn" in p:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        px = p["xattn"]
+        B, S, _ = hx.shape
+        q = (hx @ px["wq"].astype(hx.dtype)).reshape(B, S, cfg.num_heads,
+                                                     cfg.head_dim)
+        k = (enc_out @ px["wk"].astype(hx.dtype)).reshape(
+            B, -1, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ px["wv"].astype(hx.dtype)).reshape(
+            B, -1, cfg.num_kv_heads, cfg.head_dim)
+        o = attention(q, k, v, causal=False)
+        x = x + o.reshape(B, S, cfg.q_dim) @ px["wo"].astype(hx.dtype)
+
+    if kind != "ssm":
+        x = mixer_ffn(cfg, p, x, mesh)
+    return x
+
+
+# -------------------------------------------------------- decode apply ----
+
+def block_decode(cfg: ArchConfig, kind: str, p, x, state: Dict[str, Any],
+                 *, pos, positions=None, mrope_positions=None,
+                 enc_out=None, mesh=None, window_override: int = 0):
+    """One-token decode. x (B,1,d); state holds this block's caches.
+    pos (B,) absolute position of the new token."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_state = dict(state)
+    if kind in ("attn", "local"):
+        q, k, v = _project_qkv(cfg, p["attn"], h, positions,
+                               mrope_positions)
+        S_cache = state["k"].shape[1]
+        # ring-buffer write: when S_cache covers all positions this is the
+        # identity; for window caches (S_cache == window) it wraps. RoPE
+        # is applied at write time, so slot order is irrelevant to
+        # attention (permutation-invariant over the valid set).
+        slot = pos % S_cache
+        bidx = jnp.arange(x.shape[0])
+        k_cache = state["k"].at[bidx, slot].set(k[:, 0].astype(
+            state["k"].dtype))
+        v_cache = state["v"].at[bidx, slot].set(v[:, 0].astype(
+            state["v"].dtype))
+        length = jnp.minimum(pos + 1, S_cache)
+        if mesh is not None and mesh.shape.get("model", 1) > 1:
+            from repro.serve.attention import sharded_decode_attention
+            o = sharded_decode_attention(mesh, q, k_cache, v_cache, length,
+                                         attn_softcap=cfg.attn_softcap)
+        else:
+            o = decode_attention(q, k_cache, v_cache, length,
+                                 attn_softcap=cfg.attn_softcap)
+        o = o.reshape(x.shape[0], 1, cfg.q_dim) @ p["attn"]["wo"].astype(
+            x.dtype)
+        new_state["k"], new_state["v"] = k_cache, v_cache
+    elif kind == "ssm":
+        o, new_conv, new_ssm = ssm_decode_step(p["ssm"], h,
+                                               state["conv"], state["ssm"],
+                                               cfg)
+        new_state["conv"], new_state["ssm"] = new_conv, new_ssm
+    elif kind == "rglru":
+        o, new_conv, new_h = rglru_decode_step(p["rglru"], h,
+                                               state["conv"], state["h"],
+                                               cfg)
+        new_state["conv"], new_state["h"] = new_conv, new_h
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        o = rms_norm(o, p["ln1_post"], cfg.norm_eps)
+    x = x + o
+
+    if "xattn" in p and "xk" in state:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        px = p["xattn"]
+        B = hx.shape[0]
+        q = (hx @ px["wq"].astype(hx.dtype)).reshape(B, 1, cfg.num_heads,
+                                                     cfg.head_dim)
+        # cross K/V were precomputed at prefill time
+        o = decode_attention(q, state["xk"], state["xv"],
+                             state["x_len"])
+        x = x + o.reshape(B, 1, cfg.q_dim) @ px["wo"].astype(hx.dtype)
+
+    if kind != "ssm":
+        x = mixer_ffn(cfg, p, x, mesh)
+    return x, new_state

@@ -1,0 +1,81 @@
+"""Hot-token embedding cache: RapidGNN's technique on the vocab table.
+
+DESIGN.md §4: a vocab-sharded embedding table is the transformer's
+"distributed KV store" -- every token id is a remote feature fetch unless
+its row lives locally. Token ids are Zipf-distributed (long tail), and
+the deterministic data schedule (data/pipeline.py) makes the access
+counts of a whole run enumerable OFFLINE, exactly like the paper's
+Alg. 1 lines 1-3. So each worker:
+
+  1. enumerates its run's token-access counts (offline),
+  2. VectorPulls the top-n_hot non-local rows into a device cache,
+  3. serves batches cache-first; only residual misses hit the a2a pull.
+
+The device data path reuses the SAME machinery as the GNN core:
+``repro.dist.feature_a2a.pull_features`` for the pull and the
+``cache_lookup`` Pallas kernel for the hit path. ``HotEmbeddingSim``
+provides host-side accounting for the benchmarks (bytes/RPC reduction --
+paper Fig. 4/5 on the embedding workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HotEmbeddingSim:
+    vocab: int
+    d: int
+    num_workers: int
+    n_hot: int
+    counts: np.ndarray          # (vocab,) offline access counts
+
+    def __post_init__(self):
+        per = (self.vocab + self.num_workers - 1) // self.num_workers
+        self.owner = np.minimum(np.arange(self.vocab) // per,
+                                self.num_workers - 1)
+        # per-worker hot set: most-accessed REMOTE ids (paper N_cache)
+        self.cache = []
+        for w in range(self.num_workers):
+            remote = np.flatnonzero(self.owner != w)
+            order = remote[np.argsort(-self.counts[remote],
+                                      kind="stable")]
+            self.cache.append(np.sort(order[: self.n_hot]))
+
+    def batch_traffic(self, tokens: np.ndarray, worker: int
+                      ) -> Tuple[int, int, int]:
+        """-> (baseline_bytes, cached_bytes, hits) for one batch on one
+        worker. Baseline = every unique remote id fetched (DGL-style,
+        already deduped -- favourable to the baseline)."""
+        uniq = np.unique(tokens)
+        remote = uniq[self.owner[uniq] != worker]
+        hits = np.isin(remote, self.cache[worker],
+                       assume_unique=True).sum()
+        row = self.d * 4
+        return remote.size * row, int((remote.size - hits) * row), int(hits)
+
+    def cache_build_bytes(self) -> int:
+        return self.n_hot * self.d * 4
+
+
+def device_embedding_lookup(mesh, table, cache_ids, cache_feats, tokens,
+                            plan, m_max):
+    """Device path: cache-first gather + a2a residual pull.
+
+    Thin composition of the GNN-core primitives (see module docstring);
+    used by the TPU data path and exercised in tests via the host mesh.
+    table (P, V/P, d) vocab-sharded over `data`; plan is a PullPlan for
+    the residual misses (built offline from the deterministic schedule).
+    """
+    from repro.dist.feature_a2a import pull_features, cache_gather
+    import jax.numpy as jnp
+    pulled = pull_features(mesh, table, plan["send_ids"], plan["send_pos"],
+                           plan["send_mask"], plan["offsets"], m_max)
+    import jax
+    def merge(cid, cfe, tok, base):
+        out, _ = cache_gather(cid, cfe, tok, base)
+        return out
+    return jax.vmap(merge)(cache_ids, cache_feats, tokens, pulled)

@@ -1,0 +1,257 @@
+"""Model assembly: decoder-only LM + enc-dec, train/serve steps, shardings.
+
+Layer stacks are scanned over the repeat dimension R (pattern positions
+applied sequentially inside each scan body, ``jax.checkpoint``-remat'ed),
+so 80-layer configs compile one body per pattern position regardless of
+depth -- essential for the 512-device dry-runs on one CPU core.
+
+Frontend stubs ([audio]/[vlm]): per the assignment carve-out, the model
+consumes precomputed frame/patch embeddings of the right shape from
+``input_specs`` -- the transformer backbone is the real implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.common import ArchConfig, rms_norm, softcap, dense_init
+from repro.models.transformer.blocks import (init_block_params, block_apply,
+                                             block_decode)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------- init ------
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (cfg.padded_vocab, cfg.d_model), 1,
+                             dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1],
+                                       (cfg.d_model, cfg.padded_vocab), 0,
+                                       dt)
+
+    R = cfg.num_repeats
+    with_cross = cfg.kind == "encdec"
+
+    def stack_blocks(kind, base_key, n, cross):
+        ks = jax.random.split(base_key, n)
+        ps = [init_block_params(cfg, kind, k, dt, with_cross=cross)
+              for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+    params["blocks"] = [stack_blocks(kind, jax.random.fold_in(keys[2], i),
+                                     R, with_cross)
+                        for i, kind in enumerate(cfg.pattern)]
+    params["tail_blocks"] = [
+        init_block_params(cfg, kind, jax.random.fold_in(keys[4], i), dt,
+                          with_cross=with_cross)
+        for i, kind in enumerate(cfg.tail)]
+    if cfg.kind == "encdec":
+        params["enc_blocks"] = [stack_blocks("attn",
+                                             jax.random.fold_in(keys[3], 0),
+                                             cfg.num_enc_layers, False)]
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    return params
+
+
+# ---------------------------------------------------------- forward ------
+
+def _scan_blocks(cfg: ArchConfig, blocks, x, apply_fn):
+    """Scan the stacked pattern blocks: blocks[i] has leaves (R, ...).
+    ``cfg.unroll_layers`` switches to a python loop (roofline cost
+    variants -- see launch/dryrun.py)."""
+
+    @jax.checkpoint
+    def body(h, layer_params):
+        for i, kind in enumerate(cfg.pattern):
+            h = apply_fn(kind, layer_params[i], h)
+        return h, None
+
+    if cfg.unroll_layers:
+        R = jax.tree.leaves(blocks)[0].shape[0]
+        for r in range(R):
+            x, _ = body(x, jax.tree.map(lambda a: a[r], blocks))
+        return x
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
+def encode(cfg: ArchConfig, params, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Encoder over stub frontend embeddings (B, S_src, d)."""
+    pos = jnp.arange(enc_embeds.shape[1])[None, :]
+
+    def apply_fn(kind, p, h):
+        return block_apply(cfg, "attn", p, h, positions=pos, causal=False)
+
+    x = _scan_blocks(
+        dataclasses.replace(cfg, pattern=("attn",)), params["enc_blocks"],
+        enc_embeds.astype(_dtype(cfg)), apply_fn)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, tokens: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            mrope_positions: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            mesh=None) -> jnp.ndarray:
+    """tokens (B,S) -> logits (B,S,V). ``embeds`` (frontend stub output)
+    is added onto the token embeddings when given."""
+    dt = _dtype(cfg)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    if embeds is not None:
+        x = x + embeds.astype(dt)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def apply_fn(kind, p, h):
+        return block_apply(cfg, kind, p, h, positions=positions,
+                           mrope_positions=mrope_positions, enc_out=enc_out,
+                           mesh=mesh)
+
+    x = _scan_blocks(cfg, params["blocks"], x, apply_fn)
+    for i, kind in enumerate(cfg.tail):
+        x = apply_fn(kind, params["tail_blocks"][i], x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dt)
+    logits = (x @ head)[..., :cfg.vocab_size]
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def lm_loss(cfg: ArchConfig, params, batch: Dict[str, jnp.ndarray],
+            mesh=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = forward(cfg, params, batch["tokens"],
+                     mrope_positions=batch.get("mrope_positions"),
+                     embeds=batch.get("embeds"),
+                     enc_out=(encode(cfg, params, batch["enc_embeds"])
+                              if cfg.kind == "encdec" else None),
+                     mesh=mesh)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def make_train_step(cfg: ArchConfig, optimizer, mesh=None):
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            partial(lm_loss, cfg, mesh=mesh), has_aux=True)(params, batch)
+        params2, opt2 = optimizer.update(grads, opt_state, params)
+        return params2, opt2, aux
+    return step
+
+
+# ----------------------------------------------------------- decode ------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      window_override: int = 0,
+                      src_len: int = 0) -> list:
+    """Per-pattern-position stacked caches, leaves (R, B, ...)."""
+    dt = _dtype(cfg)
+
+    def one(kind, R):
+        if kind in ("attn", "local"):
+            S = cfg.window if kind == "local" else (
+                window_override if window_override > 0 else max_len)
+            S = min(S, max_len)
+            st = {"k": jnp.zeros((R, batch, S, cfg.num_kv_heads,
+                                  cfg.head_dim), dt),
+                  "v": jnp.zeros((R, batch, S, cfg.num_kv_heads,
+                                  cfg.head_dim), dt)}
+        elif kind == "ssm":
+            st = {"conv": jnp.zeros((R, batch, cfg.ssm_conv - 1,
+                                     cfg.d_inner + 2 * cfg.ssm_state), dt),
+                  "ssm": jnp.zeros((R, batch, cfg.ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state),
+                                   jnp.float32)}
+        elif kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            st = {"conv": jnp.zeros((R, batch, cfg.ssm_conv - 1, w), dt),
+                  "h": jnp.zeros((R, batch, w), jnp.float32)}
+        else:
+            raise ValueError(kind)
+        if cfg.kind == "encdec":
+            st["xk"] = jnp.zeros((R, batch, src_len, cfg.num_kv_heads,
+                                  cfg.head_dim), dt)
+            st["xv"] = jnp.zeros((R, batch, src_len, cfg.num_kv_heads,
+                                  cfg.head_dim), dt)
+            st["x_len"] = jnp.zeros((R, batch), jnp.int32)
+        return st
+
+    states = [one(kind, cfg.num_repeats) for kind in cfg.pattern]
+    tail_states = [jax.tree.map(lambda x: x[0], one(kind, 1))
+                   for kind in cfg.tail]
+    return {"scan": states, "tail": tail_states}
+
+
+def serve_step(cfg: ArchConfig, params, states, tokens: jnp.ndarray,
+               pos: jnp.ndarray, *,
+               mrope_positions: Optional[jnp.ndarray] = None,
+               mesh=None, window_override: int = 0):
+    """One decode step. tokens (B, 1); pos (B,) absolute positions.
+    -> (logits (B, 1, V), new states)."""
+    dt = _dtype(cfg)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    positions = pos[:, None]
+
+    # scan over the repeat dim with the SAME interleaving as training:
+    # within each scan body, pattern positions apply in order.
+    def body(h, xs):
+        layer_ps, layer_ss = xs
+        new_ss = []
+        for i, kind in enumerate(cfg.pattern):
+            h, ns = block_decode(
+                cfg, kind, layer_ps[i], h, layer_ss[i], pos=pos,
+                positions=positions, mrope_positions=mrope_positions,
+                mesh=mesh, window_override=window_override)
+            new_ss.append(ns)
+        return h, tuple(new_ss)
+
+    if cfg.unroll_layers:
+        R = jax.tree.leaves(params["blocks"])[0].shape[0]
+        outs = []
+        for r in range(R):
+            xs = jax.tree.map(lambda a: a[r],
+                              (tuple(params["blocks"]),
+                               tuple(states["scan"])))
+            x, ns = body(x, xs)
+            outs.append(ns)
+        new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_scan = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(states["scan"])))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        x, ns = block_decode(
+            cfg, kind, params["tail_blocks"][i], x, states["tail"][i],
+            pos=pos, positions=positions, mrope_positions=mrope_positions,
+            mesh=mesh, window_override=window_override)
+        new_tail.append(ns)
+    new_states = {"scan": list(new_scan), "tail": new_tail}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dt)
+    logits = softcap((x @ head)[..., :cfg.vocab_size].astype(jnp.float32),
+                     cfg.final_softcap)
+    return logits, new_states

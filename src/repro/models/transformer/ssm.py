@@ -1,0 +1,172 @@
+"""Mamba2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD algorithm (the paper's "minimal discrete" form) in pure JAX:
+quadratic attention-like compute INSIDE chunks of length Q, linear
+recurrent state passing BETWEEN chunks (lax.scan). TPU adaptation: the
+intra-chunk einsums are MXU-shaped (Q x Q x head_dim), the inter-chunk
+scan carries only (h, p, n) state -- no sequence-length quadratic memory,
+which is what qualifies mamba2 for long_500k.
+
+Decode is O(1): a single recurrent state update per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.common import ArchConfig, dense_init, rms_norm
+
+
+def init_ssm_params(cfg: ArchConfig, key: jax.Array,
+                    dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj packs [z (di), xBC (di+2n), dt (h)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), 0, dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), 0, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), 0, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv1d: x (B,S,C), w (K,C) -> (B,S,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., L) -> (..., L, L): segsum[i, j] = sum_{t=j+1..i} a_t for
+    i >= j (0 on the diagonal), -inf above the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray,
+             C: jnp.ndarray, chunk: int,
+             init_state: jnp.ndarray | None = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. x (b,S,h,p); dA (b,S,h); B,C (b,S,n) (single group).
+    -> (y (b,S,h,p), final_state (b,h,p,n))."""
+    b, S, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    c = S // Q
+
+    xc = x.reshape(b, c, Q, h, p)
+    dAc = dA.reshape(b, c, Q, h)
+    Bc = B.reshape(b, c, Q, n)
+    Cc = C.reshape(b, c, Q, n)
+
+    A_cs = jnp.cumsum(dAc, axis=2)                      # (b,c,Q,h)
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))       # (b,c,h,Q,Q)
+
+    # intra-chunk (diagonal blocks); exp(-inf) = 0 masks the upper triangle
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)      # (b,c,Q,Q)
+    y_diag = jnp.einsum("bcqs,bchqs,bcshp->bcqhp", scores, L, xc)
+
+    # per-chunk end states
+    decay_to_end = jnp.exp(A_cs[:, :, -1:, :] - A_cs)   # (b,c,Q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_to_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cs[:, :, -1, :])            # (b,c,h)
+
+    def step(carry, inp):
+        st, dcy = inp                                   # (b,h,p,n),(b,h)
+        prev = carry
+        new = prev * dcy[..., None, None] + st
+        return new, prev
+
+    init = (init_state if init_state is not None
+            else jnp.zeros((b, h, p, n), x.dtype))
+    final, prevs = jax.lax.scan(step,
+                                init,
+                                (jnp.moveaxis(states, 1, 0),
+                                 jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)             # (b,c,h,p,n)
+
+    # contribution of the incoming state to each position
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev_states,
+                       jnp.exp(A_cs))
+    y = (y_diag + y_off).reshape(b, S, h, p)
+    return y, final
+
+
+def ssm_forward(params: Dict[str, jax.Array], x: jnp.ndarray,
+                cfg: ArchConfig) -> jnp.ndarray:
+    """Full mamba2 mixer: x (B,S,d) -> (B,S,d)."""
+    Bsz, S, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xs, B_, C_ = jnp.split(xBC, [di, di + n], axis=-1)
+    xs = xs.reshape(Bsz, S, h, p)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])                        # (h,)
+    dA = dt * A                                          # (B,S,h)
+
+    y, _ = ssd_scan(xs.astype(jnp.float32) * dt[..., None],
+                    dA, B_.astype(jnp.float32), C_.astype(jnp.float32),
+                    cfg.ssm_chunk)
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["norm_scale"], cfg.norm_eps)
+    return (y @ params["out_proj"].astype(y.dtype)).astype(x.dtype)
+
+
+def ssm_decode_step(params: Dict[str, jax.Array], x: jnp.ndarray,
+                    conv_state: jnp.ndarray, ssm_state: jnp.ndarray,
+                    cfg: ArchConfig):
+    """One-token decode. x (B,1,d); conv_state (B,K-1,conv_dim);
+    ssm_state (B,h,p,n) -> (y (B,1,d), new conv/ssm states)."""
+    Bsz, _, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B,K,·)
+    w = params["conv_w"].astype(x.dtype)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w)
+                      + params["conv_b"].astype(x.dtype))
+    new_conv = conv_in[:, 1:]
+
+    xs, B_, C_ = jnp.split(xBC, [di, di + n], axis=-1)
+    xs = xs.reshape(Bsz, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    A = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * A)                                 # (B,h)
+
+    # h_new = h * exp(dtA) + (dt*x) outer B
+    upd = jnp.einsum("bhp,bn->bhpn", xs * dt[..., None],
+                     B_.astype(jnp.float32))
+    new_ssm = ssm_state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, C_.astype(jnp.float32))
+    y = y + params["D"][:, None] * xs
+    y = y.reshape(Bsz, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(y.dtype)).astype(x.dtype)
+    return out[:, None], new_conv, new_ssm

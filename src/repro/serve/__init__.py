@@ -1,0 +1,3 @@
+from repro.serve.attention import sharded_decode_attention
+
+__all__ = ["sharded_decode_attention"]

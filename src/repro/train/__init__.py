@@ -1,0 +1,5 @@
+from repro.train.optim import AdamW, SGD, cosine_schedule, global_norm
+from repro.train.checkpoint import save_checkpoint, load_checkpoint, checkpoint_step
+
+__all__ = ["AdamW", "SGD", "cosine_schedule", "global_norm",
+           "save_checkpoint", "load_checkpoint", "checkpoint_step"]

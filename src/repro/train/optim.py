@@ -1,0 +1,110 @@
+"""Optimizers built from scratch (no optax): AdamW + SGD, pytree-generic.
+
+Used by both the GNN reproduction and the transformer substrate. Moments
+are kept in fp32 regardless of parameter dtype (bf16-safe); weight decay
+is decoupled (AdamW). ``clip_by_global_norm`` is applied inside ``update``
+when ``max_grad_norm`` is set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: Optional[float] = None
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: PyTree, state: AdamWState,
+               params: PyTree, lr_scale: float | jnp.ndarray = 1.0):
+        if self.max_grad_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.max_grad_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr * lr_scale
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params: PyTree) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, grads: SGDState, state: SGDState, params: PyTree,
+               lr_scale: float | jnp.ndarray = 1.0):
+        mom = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.momentum, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - self.lr * lr_scale * m).astype(p.dtype),
+            params, mom)
+        return new_params, SGDState(step=state.step + 1, momentum=mom)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(base_lr_scale: float, warmup: int, total: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        return base_lr_scale * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return fn

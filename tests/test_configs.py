@@ -1,0 +1,86 @@
+"""Regression guard: every assigned architecture config matches the
+assignment sheet EXACTLY (layer counts, dims, heads, vocab, family
+features)."""
+import pytest
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, SUBQUADRATIC, get_arch
+
+# (layers, d_model, heads, kv, d_ff, vocab)
+SPEC = {
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "mamba2-1.3b": (48, 2048, 64, 64, 0, 50280),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_assigned_dimensions_exact(arch):
+    cfg = get_arch(arch)
+    L, d, h, kv, ff, v = SPEC[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_family_features():
+    assert get_arch("seamless-m4t-medium").kind == "encdec"
+    assert get_arch("qwen1.5-32b").qkv_bias
+    assert get_arch("qwen3-moe-30b-a3b").num_experts == 128
+    assert get_arch("qwen3-moe-30b-a3b").top_k == 8
+    g2 = get_arch("gemma2-2b")
+    assert g2.pattern == ("local", "attn") and g2.attn_softcap == 50.0
+    m2 = get_arch("mamba2-1.3b")
+    assert m2.pattern == ("ssm",) and m2.ssm_state == 128
+    a = get_arch("arctic-480b")
+    assert a.num_experts == 128 and a.top_k == 2 and a.dense_residual
+    vl = get_arch("qwen2-vl-72b")
+    assert vl.mrope_sections == (16, 24, 24) and vl.frontend == "vision"
+    rg = get_arch("recurrentgemma-9b")
+    assert rg.pattern == ("rglru", "rglru", "local")
+    assert rg.tail == ("rglru", "rglru")          # 38 = 12*3 + 2
+
+
+def test_head_dims_consistent():
+    for a in ARCH_NAMES:
+        cfg = get_arch(a)
+        if "ssm" in cfg.pattern:
+            assert cfg.d_inner == cfg.ssm_heads * cfg.ssm_head_dim
+        else:
+            assert cfg.num_heads % cfg.num_kv_heads == 0
+
+
+def test_input_shape_suite():
+    assert INPUT_SHAPES["train_4k"] == (4096, 256, "train")
+    assert INPUT_SHAPES["prefill_32k"] == (32768, 32, "prefill")
+    assert INPUT_SHAPES["decode_32k"] == (32768, 128, "decode")
+    assert INPUT_SHAPES["long_500k"] == (524288, 1, "decode")
+    assert SUBQUADRATIC == {"mamba2-1.3b", "recurrentgemma-9b",
+                            "gemma2-2b"}
+
+
+def test_param_counts_plausible():
+    """Analytic N within the family's nominal ballpark."""
+    expect = {"granite-3-2b": (2.0e9, 4.0e9),
+              "qwen1.5-32b": (25e9, 40e9),
+              "smollm-360m": (0.25e9, 0.5e9),
+              "arctic-480b": (380e9, 560e9),
+              "qwen2-vl-72b": (55e9, 85e9),
+              "qwen3-moe-30b-a3b": (24e9, 36e9),
+              "mamba2-1.3b": (0.9e9, 1.8e9),
+              "recurrentgemma-9b": (7e9, 12e9),
+              "gemma2-2b": (2.0e9, 3.5e9)}
+    for a, (lo, hi) in expect.items():
+        n = get_arch(a).param_counts()["total"]
+        assert lo < n < hi, (a, n)
+    a3 = get_arch("qwen3-moe-30b-a3b").param_counts()
+    assert a3["active"] < 0.25 * a3["total"]      # ~3B active of 30B

@@ -1,0 +1,196 @@
+"""RapidGNN core invariants: determinism, Prop 3.1, cache bounds,
+accounting identities (unit + property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import load_dataset, partition_graph, KHopSampler
+from repro.graph.sampler import derive_seed, rng_from
+from repro.core import (build_schedule, ShardedFeatureStore,
+                        RapidGNNRunner, BaselineRunner, NetworkModel,
+                        FeatureCache, collate, global_pad_bounds,
+                        assemble_features, EpochMetrics)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    ws = build_schedule(sampler, pg, worker=0, s0=7, num_epochs=2,
+                        n_hot=128)
+    return g, pg, sampler, ws
+
+
+# ---- seeding / Prop 3.1 --------------------------------------------------
+
+def test_seed_derivation_deterministic_and_distinct():
+    s = derive_seed(42, 1, 2, 3)
+    assert s == derive_seed(42, 1, 2, 3)
+    seen = {derive_seed(42, w, e, i) for w in range(4) for e in range(4)
+            for i in range(4)}
+    assert len(seen) == 64          # no collisions across (w, e, i)
+
+
+def test_sampler_determinism(setup):
+    g, pg, sampler, ws = setup
+    b1 = sampler.sample_batch(7, 0, 0, 0, ws.epoch(0).batches[0].seeds)
+    b2 = sampler.sample_batch(7, 0, 0, 0, ws.epoch(0).batches[0].seeds)
+    assert np.array_equal(b1.input_nodes, b2.input_nodes)
+    for l in range(2):
+        assert np.array_equal(b1.blocks[l].edge_src, b2.blocks[l].edge_src)
+
+
+def test_sampler_uniform_marginal():
+    """Prop 3.1(a): selection frequency of each adjacency slot is uniform
+    (distinct neighbors weighted by their edge multiplicity -- the graph
+    is a multigraph)."""
+    g = load_dataset("tiny")
+    v = int(np.argmax(g.in_degree()))
+    nbrs = g.neighbors(v)
+    uniq, mult = np.unique(nbrs, return_counts=True)
+    sampler = KHopSampler(g, fanouts=[8], batch_size=1)
+    counts = {int(u): 0 for u in uniq}
+    trials = 400
+    for i in range(trials):
+        b = sampler.sample_batch(0, 0, 0, i, np.array([v]))
+        picked = b.input_nodes[b.blocks[0].edge_src]
+        for u in picked[b.blocks[0].edge_mask]:
+            counts[int(u)] += 1
+    freq = np.array([counts[int(u)] for u in uniq], np.float64)
+    exp = freq.sum() * mult / mult.sum()
+    assert np.all(np.abs(freq - exp) < 5 * np.sqrt(exp + 1) + 5)
+
+
+def test_batches_differ_across_epochs_and_indices(setup):
+    g, pg, sampler, ws = setup
+    e0, e1 = ws.epoch(0), ws.epoch(1)
+    assert not np.array_equal(e0.batches[0].seeds, e1.batches[0].seeds)
+    assert not np.array_equal(e0.batches[0].input_nodes,
+                              e0.batches[1].input_nodes)
+
+
+# ---- schedule / cache invariants -----------------------------------------
+
+def test_schedule_covers_all_train_nodes_once_per_epoch(setup):
+    g, pg, sampler, ws = setup
+    local = pg.local_nodes[0]
+    train = local[g.train_mask[local]]
+    for e in range(2):
+        seeds = np.concatenate([b.seeds for b in ws.epoch(e).batches])
+        assert np.array_equal(np.sort(seeds), np.sort(train))
+
+
+def test_cache_ids_sorted_remote_only(setup):
+    g, pg, sampler, ws = setup
+    es = ws.epoch(0)
+    assert np.all(np.diff(es.cache_ids) > 0)
+    assert np.all(pg.owner[es.cache_ids] != 0)
+    # top-n_hot by frequency: min cached freq >= max uncached freq is NOT
+    # required (ties), but cached mass must be maximal for its size
+    cached_mask = np.isin(es.remote_ids, es.cache_ids)
+    if (~cached_mask).any() and cached_mask.any():
+        assert es.remote_freq[cached_mask].min() >= \
+            es.remote_freq[~cached_mask].max() - 0  # ties allowed
+
+
+def test_memory_bound(setup):
+    """Paper §3: Mem_device <= 2 n_hot d + Q m_max d."""
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0, net=NetworkModel(
+        enabled=False))
+    runner = RapidGNNRunner(ws, store, batch_size=32, Q=4)
+    runner.run()
+    m_max, _ = global_pad_bounds(ws)
+    bound = (2 * ws.n_hot * g.feat_dim) * 4
+    assert runner.device_cache_bytes <= bound + 2 * ws.n_hot * 8 + 64
+
+
+def test_feature_cache_lookup_correct():
+    rng = np.random.default_rng(0)
+    ids = np.sort(rng.choice(1000, 50, replace=False)).astype(np.int64)
+    feats = rng.normal(size=(50, 8)).astype(np.float32)
+    fc = FeatureCache(ids, feats)
+    q = np.array([ids[3], 999999, ids[10], -5])
+    pos, hit = fc.lookup(q)
+    assert list(hit) == [True, False, True, False]
+    assert np.allclose(feats[3], fc.feats[pos[0]])
+
+
+# ---- accounting identities ------------------------------------------------
+
+def test_rpc_equals_miss_set(setup):
+    """Paper invariant: per-epoch RPC count == sum of miss-set sizes."""
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    runner = RapidGNNRunner(ws, store, batch_size=32, Q=2)
+    m = runner.run()
+    for em in m.epochs:
+        assert em.rpc_count == em.cache_misses
+        assert em.remote_bytes == em.rpc_count * g.feat_dim * 4
+
+
+def test_baseline_fetches_all_remote(setup):
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    m = BaselineRunner(ws, store, batch_size=32).run()
+    for e, em in enumerate(m.epochs):
+        want = sum(int((pg.owner[b.input_nodes] != 0).sum())
+                   for b in ws.epoch(e).batches)
+        assert em.rpc_count == want
+
+
+def test_rapidgnn_never_fetches_more_than_baseline(setup):
+    g, pg, sampler, ws = setup
+    net = NetworkModel(enabled=False)
+    r = RapidGNNRunner(ws, ShardedFeatureStore(pg, 0, net),
+                       batch_size=32).run().totals()
+    b = BaselineRunner(ws, ShardedFeatureStore(pg, 0, net),
+                       batch_size=32).run().totals()
+    assert r["rpc_count"] < b["rpc_count"]
+
+
+def test_assembled_features_match_ground_truth(setup):
+    """End-to-end data-path correctness: every valid slot holds the true
+    global feature row, regardless of cache/miss path taken."""
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    es = ws.epoch(0)
+    m_max, edge_max = global_pad_bounds(ws)
+    met = EpochMetrics()
+    cache_feats = store.vector_pull(es.cache_ids, met)
+    cache = FeatureCache(es.cache_ids, cache_feats)
+    for b in es.batches[:3]:
+        cb = collate(b, g.labels, 32, m_max, edge_max)
+        feats = assemble_features(cb, store, cache, met,
+                                  critical_path=False)
+        want = g.features[b.input_nodes]
+        np.testing.assert_allclose(feats[:b.num_input_nodes], want)
+        np.testing.assert_allclose(feats[b.num_input_nodes:], 0.0)
+
+
+# ---- property-based -------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 7), st.integers(0, 7))
+def test_seed_streams_reproducible(s0, w, e):
+    a = rng_from(s0, w, e, 0).integers(0, 1 << 30, 8)
+    b = rng_from(s0, w, e, 0).integers(0, 1 << 30, 8)
+    assert np.array_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 64))
+def test_cache_lookup_property(n, m):
+    """searchsorted-based cache lookup: hits iff id in cache."""
+    rng = np.random.default_rng(n * 1000 + m)
+    ids = np.sort(rng.choice(10000, size=min(n, 100),
+                             replace=False)).astype(np.int64)
+    fc = FeatureCache(ids, rng.normal(size=(ids.size, 4)).astype(
+        np.float32))
+    q = rng.integers(0, 10000, size=m)
+    _, hit = fc.lookup(q)
+    assert np.array_equal(hit, np.isin(q, ids))

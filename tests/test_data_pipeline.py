@@ -1,0 +1,76 @@
+"""Data pipeline + hot-token embedding cache tests (paper technique on
+the transformer side)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.pipeline import (zipf_tokens, make_batch,
+                                 synthetic_lm_batches,
+                                 enumerate_token_accesses)
+from repro.graph.sampler import rng_from
+from repro.models.transformer.embedding import HotEmbeddingSim
+
+
+def test_zipf_long_tail():
+    rng = np.random.default_rng(0)
+    toks = zipf_tokens(rng, 10_000, (100_000,))
+    counts = np.bincount(toks, minlength=10_000)
+    top = np.sort(counts)[::-1]
+    assert top[:100].sum() > 0.35 * counts.sum()    # head-heavy
+    assert (counts == 0).sum() > 50                 # long tail untouched
+
+
+def test_deterministic_batches():
+    cfg = get_reduced("granite-3-2b")
+    a = list(synthetic_lm_batches(cfg, 2, 16, 3, s0=5))
+    b = list(synthetic_lm_batches(cfg, 2, 16, 3, s0=5))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x["tokens"]),
+                                      np.asarray(y["tokens"]))
+    c = list(synthetic_lm_batches(cfg, 2, 16, 1, s0=6))
+    assert not np.array_equal(np.asarray(a[0]["tokens"]),
+                              np.asarray(c[0]["tokens"]))
+
+
+def test_offline_enumeration_matches_runtime():
+    """Alg. 1 lines 1-3 on tokens: offline counts == actual accesses."""
+    cfg = get_reduced("smollm-360m")
+    counts = enumerate_token_accesses(cfg, 2, 32, 4, s0=9)
+    runtime = np.zeros(cfg.vocab_size, np.int64)
+    for i in range(4):
+        toks = zipf_tokens(rng_from(9, 0, i), cfg.vocab_size, (2, 32))
+        runtime += np.bincount(toks.reshape(-1),
+                               minlength=cfg.vocab_size)
+    np.testing.assert_array_equal(counts, runtime)
+
+
+def test_hot_embedding_cache_invariants():
+    counts = np.zeros(1000, np.int64)
+    counts[:50] = 1000          # hot head
+    counts[50:200] = 3
+    sim = HotEmbeddingSim(vocab=1000, d=8, num_workers=4, n_hot=64,
+                          counts=counts)
+    # caches only hold remote ids
+    for w in range(4):
+        assert np.all(sim.owner[sim.cache[w]] != w)
+    # hot head ids (remote ones) always cached
+    hot_remote = [t for t in range(50) if sim.owner[t] != 0]
+    assert np.isin(hot_remote, sim.cache[0]).all()
+    # cached traffic <= baseline, always
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, size=(4, 64))
+    b, c, h = sim.batch_traffic(toks, worker=0)
+    assert c <= b
+    assert h >= 0
+
+
+def test_make_batch_shapes_all_families():
+    for arch in ("qwen2-vl-72b", "seamless-m4t-medium", "mamba2-1.3b"):
+        cfg = get_reduced(arch)
+        batch = make_batch(cfg, np.random.default_rng(0), 2, 16)
+        assert batch["tokens"].shape == (2, 16)
+        if cfg.frontend == "vision":
+            assert batch["embeds"].shape == (2, 16, cfg.d_model)
+            assert batch["mrope_positions"].shape == (3, 2, 16)
+        if cfg.kind == "encdec":
+            assert batch["enc_embeds"].shape == (2, 16, cfg.d_model)

@@ -1,0 +1,50 @@
+"""Training flash-attention Pallas kernel vs oracle, shape/dtype sweep."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+
+
+@pytest.mark.parametrize("B,S,H,kvH,dh", [
+    (1, 128, 4, 2, 64), (2, 256, 8, 1, 64), (2, 128, 4, 4, 128),
+])
+def test_flash_attention_sweep(B, S, H, kvH, dh):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, kvH, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, kvH, dh)).astype(np.float32))
+    ref = flash_attention(q, k, v, use_kernel=False)
+    ker = flash_attention(q, k, v, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(causal=True, softcap=30.0),
+    dict(causal=True, window=64),
+    dict(causal=False),
+])
+def test_flash_attention_variants(kw):
+    rng = np.random.default_rng(7)
+    B, S, H, kvH, dh = 2, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, kvH, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, kvH, dh)).astype(np.float32))
+    ref = flash_attention(q, k, v, use_kernel=False, **kw)
+    ker = flash_attention(q, k, v, use_kernel=True, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_bf16_inputs():
+    rng = np.random.default_rng(9)
+    B, S, H, kvH, dh = 1, 128, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, kvH, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, kvH, dh)), jnp.bfloat16)
+    ref = flash_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), use_kernel=False)
+    ker = flash_attention(q, k, v, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker).astype(np.float32),
+                               np.asarray(ref), rtol=2e-2, atol=2e-2)

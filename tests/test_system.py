@@ -1,0 +1,145 @@
+"""End-to-end behaviour tests for the paper's system (deliverable c).
+
+Covers: full RapidGNN training convergence + parity with the baseline
+(paper Fig. 9 / Prop 3.1), prefetch pipeline liveness, checkpointing
+round-trip, partitioner balance, dataset statistics, optimizer.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graph import (load_dataset, partition_graph, KHopSampler,
+                         random_partition, greedy_partition)
+from repro.core import (build_schedule, ShardedFeatureStore,
+                        RapidGNNRunner, BaselineRunner, NetworkModel)
+from repro.models import (GNNConfig, init_params, make_train_step,
+                          batch_to_device)
+from repro.train import (AdamW, SGD, cosine_schedule, save_checkpoint,
+                         load_checkpoint, checkpoint_step, global_norm)
+
+
+def _train_system(system, epochs=4, s0=7):
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    ws = build_schedule(sampler, pg, worker=0, s0=s0, num_epochs=epochs,
+                        n_hot=128)
+    cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=32,
+                    num_classes=g.num_classes, num_layers=2)
+    params = init_params(cfg, jax.random.key(0))
+    opt = AdamW(lr=3e-3)
+    box = {"p": params, "o": opt.init(params), "loss": [], "acc": []}
+    step = make_train_step(cfg, opt)
+
+    def train_fn(feats, cb):
+        box["p"], box["o"], aux = step(box["p"], box["o"],
+                                       batch_to_device(cb, feats))
+        box["loss"].append(float(aux["loss"]))
+        box["acc"].append(float(aux["acc"]))
+        return box["loss"][-1]
+
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    runner = (RapidGNNRunner(ws, store, batch_size=32, Q=4,
+                             train_fn=train_fn)
+              if system == "rapidgnn"
+              else BaselineRunner(ws, store, batch_size=32,
+                                  train_fn=train_fn))
+    metrics = runner.run()
+    return box, metrics
+
+
+def test_rapidgnn_training_converges():
+    box, m = _train_system("rapidgnn")
+    assert box["loss"][-1] < box["loss"][0] * 0.5
+    assert box["acc"][-1] > 0.8
+    assert not any(np.isnan(box["loss"]))
+
+
+def test_convergence_parity_with_baseline():
+    """Prop 3.1 / Fig 9: identical schedule => identical training curves."""
+    r, _ = _train_system("rapidgnn")
+    b, _ = _train_system("baseline")
+    np.testing.assert_allclose(r["loss"], b["loss"], rtol=1e-5, atol=1e-6)
+
+
+def test_prefetcher_serves_all_batches_in_order():
+    _, m = _train_system("rapidgnn", epochs=2)
+    for em in m.epochs:
+        assert em.default_path == 0
+        assert em.prefetch_hits > 0
+
+
+def test_partitioners():
+    g = load_dataset("tiny")
+    for fn in (random_partition, greedy_partition):
+        pg = fn(g, 4)
+        sizes = pg.part_sizes
+        assert sizes.sum() == g.num_nodes
+        assert sizes.max() - sizes.min() <= max(4, g.num_nodes // 50)
+    # edge-cut partitioner must beat random on a clustered graph
+    r = random_partition(g, 4).edge_cut_fraction()
+    ge = greedy_partition(g, 4).edge_cut_fraction()
+    assert ge < r
+
+
+def test_dataset_statistics():
+    g = load_dataset("tiny")
+    g.validate()
+    deg = g.in_degree()
+    assert deg.mean() > 4
+    # heavy tail: max degree much larger than mean
+    assert deg.max() > 5 * deg.mean()
+    assert g.features.shape == (g.num_nodes, 32)
+    assert g.labels.max() < 8
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = GNNConfig(kind="sage", in_dim=8, hidden_dim=16, num_classes=4,
+                    num_layers=2)
+    params = init_params(cfg, jax.random.key(1))
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, step=123)
+    assert checkpoint_step(path) == 123
+    like = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), params)
+    loaded = load_checkpoint(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_optimizers_reduce_quadratic():
+    def loss(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    for opt in (AdamW(lr=0.1), SGD(lr=0.05)):
+        p = {"w": jnp.zeros(4)}
+        s = opt.init(p)
+        for _ in range(100):
+            g = jax.grad(loss)(p)
+            p, s = opt.update(g, s, p)
+        assert float(loss(p)) < 0.3
+
+
+def test_cosine_schedule_and_global_norm():
+    f = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(100)) < 1e-6
+    assert abs(float(global_norm({"a": jnp.ones(4), "b": jnp.ones(4)}))
+               - np.sqrt(8)) < 1e-6
+
+
+def test_spill_to_disk_schedule(tmp_path):
+    """SSD-streaming mode: schedules spilled per epoch, reloaded on use."""
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    ws = build_schedule(sampler, pg, worker=0, s0=7, num_epochs=2,
+                        n_hot=64, spill_dir=str(tmp_path))
+    assert all(e is None for e in ws.epochs)
+    es = ws.epoch(1)
+    assert es.num_batches > 0
+    assert os.path.exists(tmp_path / "w0_e1.pkl")
