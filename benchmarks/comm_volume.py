@@ -1,24 +1,88 @@
 """Paper Fig. 4: mean data transferred per training step, RapidGNN vs
-DGL-METIS, across datasets and batch sizes."""
+DGL-METIS, across datasets and batch sizes.
+
+Two independent accountings of the same schedule are reported side by
+side so they can cross-checked (DESIGN.md §7):
+
+  * host-sim bytes  -- ``ShardedFeatureStore`` metering from the runner
+    (remote_bytes + vector_pull_bytes), and
+  * device-path bytes -- replayed from the ``build_pull_plan`` send
+    masks: the payload (true residual-miss rows) must MATCH the host
+    sim's remote_bytes exactly, while the wire column adds the padded
+    all_to_all lanes (P * k_max rows/step) the static-shape collective
+    actually moves.
+"""
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import run_gnn_system
+from repro.graph import load_dataset, partition_graph, KHopSampler
+from repro.core import build_schedule
+from repro.dist import DeviceView, build_pull_plan, epoch_k_max
+from repro.dist.gnn_step import _batch_miss
+
+
+def device_path_bytes(dataset: str, batch_size: int, workers: int,
+                      epochs: int, n_hot: int, s0: int = 42,
+                      worker: int = 0):
+    """-> (payload_bytes, wire_bytes, cache_bytes, steps) for one worker,
+    replaying the exact schedule ``run_gnn_system`` uses through the
+    device-path pull plans. The lane bound ``k_max`` is the ALL-workers
+    epoch maximum (``epoch_k_max``), as the compiled collective uses --
+    wire bytes reflect what actually moves, not worker-local padding."""
+    g = load_dataset(dataset)
+    pg = partition_graph(g, workers, "metis")
+    sampler = KHopSampler(g, fanouts=(25, 10), batch_size=batch_size)
+    ws_all = [build_schedule(sampler, pg, worker=w, s0=s0,
+                             num_epochs=epochs, n_hot=n_hot)
+              for w in range(workers)]
+    dv = DeviceView.build(pg)
+    row = g.feat_dim * g.features.itemsize
+    payload = wire = cache = steps = 0
+    for e in range(epochs):
+        es_list = [ws.epoch(e) for ws in ws_all]
+        caches = [dv.remap_cache(es.cache_ids) for es in es_list]
+        cache += es_list[worker].cache_ids.shape[0] * row   # VectorPull
+        k_max = epoch_k_max(es_list, caches, dv, g.labels, batch_size,
+                            0, [])
+        for b in es_list[worker].batches:
+            dev, miss = _batch_miss(b, caches[worker], dv, worker)
+            plan = build_pull_plan(dev[miss].astype(np.int32),
+                                   np.flatnonzero(miss).astype(np.int32),
+                                   dv.owner_d, pg.num_parts, k_max)
+            payload += plan.payload_bytes(row)
+            wire += plan.wire_bytes(row)
+            steps += 1
+    return payload, wire, cache, steps
 
 
 def run(datasets=("ogbn_products_sim", "reddit_sim"),
-        batch_sizes=(100, 200), epochs=2, workers=4):
+        batch_sizes=(100, 200), epochs=2, workers=4, n_hot=32768):
     rows = ["dataset,batch,rapidgnn_MB_per_step,dglmetis_MB_per_step,"
-            "reduction_x"]
+            "reduction_x,device_payload_MB_per_step,"
+            "device_wire_MB_per_step,host_vs_device_payload"]
     for ds in datasets:
         for b in batch_sizes:
             r = run_gnn_system("rapidgnn", ds, b, workers=workers,
-                               epochs=epochs, train=False)
+                               epochs=epochs, n_hot=n_hot, train=False)
             m = run_gnn_system("dgl-metis", ds, b, workers=workers,
                                epochs=epochs, train=False)
-            rmb = r.bytes_per_step / 1e6
-            mmb = m.bytes_per_step / 1e6
+            payload, wire, cache, steps = device_path_bytes(
+                ds, b, workers, epochs, n_hot)
+            # ONE denominator for every per-step column: all steps of all
+            # epochs (GNNResult.bytes_per_step drops epoch 0's steps but
+            # keeps its bytes -- not comparable across accountings).
+            n = max(steps, 1)
+            rmb = (r.remote_bytes + r.vector_pull_bytes) / n / 1e6
+            mmb = (m.remote_bytes + m.vector_pull_bytes) / n / 1e6
+            dp = payload / n / 1e6
+            dw = wire / n / 1e6
+            match = ("MATCH" if payload == r.remote_bytes
+                     else f"DIFF({payload}vs{r.remote_bytes})")
             rows.append(f"{ds},{b},{rmb:.2f},{mmb:.2f},"
-                        f"{mmb / max(rmb, 1e-9):.2f}")
+                        f"{mmb / max(rmb, 1e-9):.2f},{dp:.2f},{dw:.2f},"
+                        f"{match}")
     return rows
 
 

@@ -19,21 +19,17 @@ from repro.core.fetch import ShardedFeatureStore
 from repro.core.metrics import EpochMetrics, NetworkModel, RunMetrics
 from repro.core.prefetch import (Prefetcher, SecondaryCacheBuilder,
                                  StagedBatch, assemble_features)
-from repro.core.schedule import (WorkerSchedule, collate, epoch_edge_maxima)
+from repro.core.schedule import WorkerSchedule, collate
 
 TrainFn = Callable[[np.ndarray, "CollatedBatch"], float]  # noqa: F821
 
 
 def global_pad_bounds(ws: WorkerSchedule):
-    """Static shapes across ALL epochs -> one XLA compilation."""
-    m_max, edge_max = 0, None
-    for e in range(len(ws.epochs)):
-        es = ws.epoch(e)
-        m_max = max(m_max, es.m_max)
-        em = epoch_edge_maxima(es)
-        edge_max = em if edge_max is None else [max(a, b) for a, b
-                                                in zip(edge_max, em)]
-    return m_max, edge_max
+    """Static shapes across ALL epochs -> one XLA compilation.
+
+    Served from the schedule's build-time (m_max, edge_maxima) metadata
+    cache, so spilled epochs are never re-unpickled for pad bounds."""
+    return ws.pad_bounds()
 
 
 class RapidGNNRunner:

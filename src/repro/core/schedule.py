@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import pickle
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,6 +45,9 @@ class WorkerSchedule:
     n_hot: int
     epochs: List[Optional[EpochSchedule]]
     spill_dir: Optional[str] = None
+    #: per-epoch (m_max, edge_maxima) pad metadata, captured at build time
+    #: so pad-bound queries never re-unpickle spilled epochs from disk.
+    epoch_meta: Optional[List[Tuple[int, List[int]]]] = None
 
     def epoch(self, e: int) -> EpochSchedule:
         if self.epochs[e] is None:                      # spilled
@@ -54,9 +57,28 @@ class WorkerSchedule:
                 return pickle.load(f)
         return self.epochs[e]
 
+    def _meta(self) -> List[Tuple[int, List[int]]]:
+        if self.epoch_meta is None:     # schedules built before the cache
+            self.epoch_meta = []        # existed: one-time backfill
+            for e in range(len(self.epochs)):
+                es = self.epoch(e)
+                self.epoch_meta.append((es.m_max, epoch_edge_maxima(es)))
+        return self.epoch_meta
+
     @property
     def m_max(self) -> int:
-        return max(self.epoch(e).m_max for e in range(len(self.epochs)))
+        return max(m for m, _ in self._meta())
+
+    def pad_bounds(self) -> Tuple[int, List[int]]:
+        """Static (m_max, edge_maxima) across ALL epochs -> one XLA
+        compilation; served from cached metadata, never from spill_dir."""
+        metas = self._meta()
+        m_max = max(m for m, _ in metas)
+        edge_max = None
+        for _, em in metas:
+            edge_max = (list(em) if edge_max is None
+                        else [max(a, b) for a, b in zip(edge_max, em)])
+        return m_max, edge_max
 
 
 def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
@@ -96,8 +118,10 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     tm = pg.graph.train_mask
     train_nodes = local[tm[local]] if tm is not None else local
     epochs: List[Optional[EpochSchedule]] = []
+    epoch_meta: List[Tuple[int, List[int]]] = []
     for e in range(num_epochs):
         es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot)
+        epoch_meta.append((es.m_max, epoch_edge_maxima(es)))
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
             with open(os.path.join(spill_dir, f"w{worker}_e{e}.pkl"),
@@ -107,7 +131,7 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
         else:
             epochs.append(es)
     return WorkerSchedule(worker=worker, s0=s0, n_hot=n_hot, epochs=epochs,
-                          spill_dir=spill_dir)
+                          spill_dir=spill_dir, epoch_meta=epoch_meta)
 
 
 # ---------------------------------------------------------------------------

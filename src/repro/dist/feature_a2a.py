@@ -1,0 +1,164 @@
+"""SPMD cache-first feature exchange: the device realisation of the
+paper's VectorPull / SyncPull over a ``("data",)`` mesh (DESIGN.md §6).
+
+Host-sim counterpart: ``repro.core.fetch.ShardedFeatureStore``. Here the
+"distributed KV store" is a partition-sharded feature table resident in
+device memory -- ``table[(P, n_per, d)]`` sharded on its leading dim over
+``data`` -- and a remote fetch is one ``all_to_all`` round trip:
+
+  1. every worker sends each owner the (deduped, offline-enumerated) slot
+     requests it needs from that owner   -- ids up the wire,
+  2. each owner gathers the rows from its local shard,
+  3. a second ``all_to_all`` returns the rows, which the requester
+     scatters into its padded (m_max, d) batch buffer by ``send_pos``.
+
+The request matrix is the PULL-PLAN WIRE FORMAT (DESIGN.md §6.2), built
+OFFLINE by ``build_pull_plan`` from the deterministic schedule -- this is
+what makes the exchange a static-shape collective XLA can overlap with
+compute, instead of a dynamic RPC storm.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels.cache_lookup.ops import cache_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class PullPlan:
+    """One worker's residual-miss requests for one batch.
+
+    Wire format (DESIGN.md §6.2): row ``p`` of each array is this
+    worker's request lane to owner ``p``; lanes are padded to the
+    epoch-level ``k_max`` so every step reuses one compiled program.
+    ``send_pos`` is the destination row in the requester's padded
+    (m_max, d) feature buffer -- the owner never needs it, it rides
+    along host-side only.
+    """
+    send_ids: np.ndarray    # (P, k_max) int32  requested ids (0 padded)
+    send_pos: np.ndarray    # (P, k_max) int32  dst row in the batch buffer
+    send_mask: np.ndarray   # (P, k_max) bool   lane validity
+    counts: np.ndarray      # (P,) int32        true request count per owner
+
+    @property
+    def k_max(self) -> int:
+        return int(self.send_ids.shape[1])
+
+    def payload_bytes(self, row_bytes: int) -> int:
+        """Feature bytes actually requested (un-padded)."""
+        return int(self.counts.sum()) * row_bytes
+
+    def wire_bytes(self, row_bytes: int) -> int:
+        """Feature bytes moved by the padded all_to_all return leg."""
+        return int(self.send_ids.size) * row_bytes
+
+
+def build_pull_plan(ids: np.ndarray, pos: np.ndarray, owner: np.ndarray,
+                    num_parts: int, k_max: int) -> PullPlan:
+    """Pack (id -> buffer position) requests into per-owner lanes.
+
+    ids (m,) requested node ids (negative = padding, dropped); pos (m,)
+    destination rows, same length; owner (N,) id -> owning worker. Exact
+    duplicate (id, pos) pairs are deduped to one lane slot; the same id
+    at *distinct* positions keeps one slot per position (each output row
+    must receive its feature -- ids are already unique per batch in the
+    GNN path, where the sampler dedupes ``input_nodes``).
+
+    Raises ValueError when any owner's request count exceeds ``k_max``
+    (silent truncation would drop features and corrupt training).
+    """
+    ids = np.asarray(ids)
+    pos = np.asarray(pos)
+    if ids.shape != pos.shape:
+        raise ValueError(f"ids/pos length mismatch: {ids.shape} vs {pos.shape}")
+    valid = ids >= 0
+    ids, pos = ids[valid].astype(np.int64), pos[valid].astype(np.int64)
+    if ids.size:
+        pairs = np.unique(np.stack([ids, pos], axis=1), axis=0)
+        ids, pos = pairs[:, 0], pairs[:, 1]
+    dest = np.asarray(owner)[ids].astype(np.int64)
+    counts = np.bincount(dest, minlength=num_parts).astype(np.int32)
+    if counts.size > num_parts:
+        raise ValueError(f"owner id out of range: max dest {counts.size - 1}"
+                         f" >= num_parts {num_parts}")
+    if ids.size and int(counts.max()) > k_max:
+        over = np.flatnonzero(counts > k_max)
+        raise ValueError(
+            f"pull plan overflow: owners {over.tolist()} requested "
+            f"{counts[over].tolist()} rows > k_max={k_max}; raise k_max "
+            f"(epoch_k_max gives the exact bound)")
+
+    send_ids = np.zeros((num_parts, k_max), np.int32)
+    send_pos = np.zeros((num_parts, k_max), np.int32)
+    send_mask = np.zeros((num_parts, k_max), bool)
+    order = np.argsort(dest, kind="stable")
+    start = np.zeros(num_parts + 1, np.int64)
+    np.cumsum(counts, out=start[1:])
+    lane = np.arange(ids.size) - start[dest[order]]
+    send_ids[dest[order], lane] = ids[order].astype(np.int32)
+    send_pos[dest[order], lane] = pos[order].astype(np.int32)
+    send_mask[dest[order], lane] = True
+    return PullPlan(send_ids=send_ids, send_pos=send_pos,
+                    send_mask=send_mask, counts=counts)
+
+
+def pull_shard(table: jnp.ndarray, send_ids: jnp.ndarray,
+               send_pos: jnp.ndarray, send_mask: jnp.ndarray,
+               base, m_max: int) -> jnp.ndarray:
+    """Per-device exchange body; call inside shard_map over axis ``data``.
+
+    table (n_per, d) this worker's shard; send_* (P, k) its request
+    lanes; base this worker's first global slot. -> (m_max, d) buffer
+    with requested rows scattered to ``send_pos`` (other rows zero).
+    Padding lanes may request owner-slot 0; the requester's send_mask
+    zeroes them at scatter, so the mask never has to cross the wire.
+    """
+    n_per, d = table.shape
+    req = jax.lax.all_to_all(send_ids, "data", 0, 0)      # (P, k) asks TO me
+    slot = jnp.clip(req - base, 0, n_per - 1)
+    rows = table[slot]                                    # (P, k, d) serve
+    got = jax.lax.all_to_all(rows, "data", 0, 0)          # (P, k, d) mine
+    out = jnp.zeros((m_max, d), table.dtype)
+    pos = jnp.where(send_mask, send_pos, 0).reshape(-1)
+    contrib = jnp.where(send_mask.reshape(-1, 1), got.reshape(-1, d), 0)
+    return out.at[pos].add(contrib)
+
+
+def pull_features(mesh, table: jnp.ndarray, send_ids: jnp.ndarray,
+                  send_pos: jnp.ndarray, send_mask: jnp.ndarray,
+                  offsets: jnp.ndarray, m_max: int) -> jnp.ndarray:
+    """All-worker a2a feature pull against the partition-sharded table.
+
+    table (P, n_per, d) sharded over ``data``; send_* (P, P, k_max) --
+    dim 0 the requesting worker (sharded), dim 1 the owner lane;
+    offsets (P,) int32 first global slot of each partition.
+    -> (P, m_max, d) per-worker scattered feature buffers.
+    """
+    def body(tbl, sid, spo, sma, off):
+        return pull_shard(tbl[0], sid[0], spo[0], sma[0],
+                          off.reshape(-1)[0], m_max)[None]
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P("data"), P("data")),
+        out_specs=P("data"), check_rep=False,
+    )(table, send_ids, send_pos, send_mask, offsets)
+
+
+def cache_gather(cache_ids: jnp.ndarray, cache_feats: jnp.ndarray,
+                 query: jnp.ndarray, base: jnp.ndarray):
+    """Hot-set C_s merge: overlay cache hits onto a pre-filled buffer.
+
+    cache_ids (n_hot,) SORTED int32 (INT32_MAX padded); cache_feats
+    (n_hot, d); query (m,) ids (-1 = padding, never hits); base (m, d)
+    buffer already holding pulled/local rows. -> (merged, hit_mask).
+    On TPU this is the fused Pallas ``cache_lookup`` kernel; the jnp
+    oracle runs everywhere else.
+    """
+    return cache_lookup(cache_ids, cache_feats, query, base)

@@ -1,0 +1,271 @@
+"""Scan-pipelined RapidGNN epoch on an SPMD ``("data",)`` mesh.
+
+This is Alg. 1's prefetcher/trainer overlap expressed INSIDE the compiled
+step program (DESIGN.md §6.3): a ``jax.lax.scan`` over the S steps of an
+epoch whose body (a) issues the all_to_all residual-miss pull for step
+i+1 and (b) trains on step i's already-pulled features. Both live in one
+dataflow graph with no dependency between them, so the collective hides
+behind the train step's compute -- the device analogue of the host-side
+``core.prefetch.Prefetcher`` thread, with the bounded queue replaced by a
+1-step software pipeline carried through the scan.
+
+Host-side companions (all numpy, computed offline from the deterministic
+schedule): ``DeviceView`` relabels the partitioned graph into contiguous
+per-worker slot ranges so ownership is ``id // n_per``; ``epoch_k_max``
+computes the exact static lane bound; ``collate_device_epoch`` packs a
+whole epoch into (S, P, ...) arrays; ``stack_caches`` stacks the
+per-worker hot sets C_s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.schedule import EpochSchedule, collate
+from repro.graph.partition import PartitionedGraph
+from repro.kernels.cache_lookup.ops import cache_lookup, to_device_ids
+from repro.models.gnn import GNNConfig, loss_fn
+from repro.dist.feature_a2a import build_pull_plan, pull_shard
+
+#: int64 cache padding; survives the int32 canonicalisation cast exactly
+#: and matches the ``cache_lookup`` device sentinel.
+CACHE_PAD = int(2 ** 31 - 1)
+
+
+@dataclasses.dataclass
+class DeviceCache:
+    """One worker's hot set C_s in DEVICE id space, sorted for searchsorted."""
+    ids: np.ndarray      # (k,) int64 device ids, sorted unique
+    feats: np.ndarray    # (k, d) float32
+
+
+@dataclasses.dataclass
+class DeviceView:
+    """Device relabeling of a PartitionedGraph.
+
+    Partitions own arbitrary global-id sets; the device path needs
+    ownership decidable by arithmetic (``owner = id // n_per``) so the
+    pull can turn an id into (owner, slot) with no lookup table on
+    device. ``build`` assigns worker p's nodes the dense device ids
+    ``p * n_per + [0..|V_p|)`` with ``n_per = max_p |V_p|`` (tail slots
+    of smaller partitions are zero rows, never referenced).
+    """
+    num_parts: int
+    n_per: int
+    table: np.ndarray      # (P, n_per, d) float32, partition-sharded rows
+    offsets: np.ndarray    # (P, 1) int32   first device slot per worker
+    g2d: np.ndarray        # (n,) int64     global id -> device id
+    features: np.ndarray   # (n, d)         global table (host ref, not copied)
+
+    @staticmethod
+    def build(pg: PartitionedGraph) -> "DeviceView":
+        g = pg.graph
+        P_ = pg.num_parts
+        n_per = int(max(ln.shape[0] for ln in pg.local_nodes))
+        table = np.zeros((P_, n_per, g.feat_dim), np.float32)
+        g2d = np.empty(g.num_nodes, np.int64)
+        for p, loc in enumerate(pg.local_nodes):
+            table[p, : loc.shape[0]] = g.features[loc]
+            g2d[loc] = p * n_per + np.arange(loc.shape[0], dtype=np.int64)
+        offsets = (np.arange(P_, dtype=np.int32) * n_per)[:, None]
+        return DeviceView(num_parts=P_, n_per=n_per, table=table,
+                          offsets=offsets, g2d=g2d, features=g.features)
+
+    @property
+    def owner_d(self) -> np.ndarray:
+        """(P*n_per,) device-id -> owner, for build_pull_plan."""
+        return np.repeat(np.arange(self.num_parts, dtype=np.int32),
+                         self.n_per)
+
+    def remap_cache(self, cache_ids_global: np.ndarray) -> DeviceCache:
+        """Global hot-set ids (schedule output) -> sorted device cache."""
+        dev = self.g2d[cache_ids_global]
+        order = np.argsort(dev)
+        return DeviceCache(
+            ids=dev[order],
+            feats=self.features[cache_ids_global[order]].astype(np.float32))
+
+
+def _batch_miss(es_batch, cache: DeviceCache, dv: DeviceView, worker: int):
+    """-> (dev_ids (m,), miss_mask (m,)) for one sampled batch."""
+    dev = dv.g2d[es_batch.input_nodes]
+    remote = (dev // dv.n_per) != worker
+    miss = remote & ~np.isin(dev, cache.ids, assume_unique=False)
+    return dev, miss
+
+
+def epoch_k_max(es_list: Sequence[EpochSchedule],
+                caches: Sequence[DeviceCache], dv: DeviceView,
+                labels: np.ndarray, batch_size: int, m_max: int,
+                edge_max: Sequence[int]) -> int:
+    """Exact static per-owner lane bound over all (worker, step) pairs."""
+    k = 1
+    for w, es in enumerate(es_list):
+        for b in es.batches:
+            dev, miss = _batch_miss(b, caches[w], dv, w)
+            if miss.any():
+                owners = dev[miss] // dv.n_per
+                k = max(k, int(np.bincount(owners).max()))
+    return k
+
+
+def collate_device_epoch(es_list: Sequence[EpochSchedule],
+                         caches: Sequence[DeviceCache], dv: DeviceView,
+                         labels: np.ndarray, batch_size: int, m_max: int,
+                         edge_max: Sequence[int], k_max: int,
+                         num_steps: int) -> Dict[str, np.ndarray]:
+    """Pack an epoch into the (S, P, ...) device layout.
+
+    Per (step, worker): the padded collated batch (ids remapped to
+    device space, -1 padded) plus the residual-miss PullPlan lanes.
+    Layout matches launch/dryrun_gnn.specs exactly.
+    """
+    P_ = len(es_list)
+    S = num_steps
+    L = len(edge_max)
+    out = {
+        "input_nodes": np.full((S, P_, m_max), -1, np.int64),
+        "labels": np.zeros((S, P_, batch_size), np.int32),
+        "seed_mask": np.zeros((S, P_, batch_size), bool),
+        "send_ids": np.zeros((S, P_, P_, k_max), np.int32),
+        "send_pos": np.zeros((S, P_, P_, k_max), np.int32),
+        "send_mask": np.zeros((S, P_, P_, k_max), bool),
+        "edge_src": [np.zeros((S, P_, e), np.int32) for e in edge_max],
+        "edge_dst": [np.zeros((S, P_, e), np.int32) for e in edge_max],
+        "edge_mask": [np.zeros((S, P_, e), bool) for e in edge_max],
+    }
+    owner_d = dv.owner_d
+    for w, es in enumerate(es_list):
+        for i in range(S):
+            b = es.batches[i]
+            cb = collate(b, labels, batch_size, m_max, edge_max)
+            dev, miss = _batch_miss(b, caches[w], dv, w)
+            m = b.num_input_nodes
+            out["input_nodes"][i, w, :m] = dev
+            out["labels"][i, w] = cb.labels
+            out["seed_mask"][i, w] = cb.seed_mask
+            plan = build_pull_plan(dev[miss].astype(np.int32),
+                                   np.flatnonzero(miss).astype(np.int32),
+                                   owner_d, P_, k_max)
+            out["send_ids"][i, w] = plan.send_ids
+            out["send_pos"][i, w] = plan.send_pos
+            out["send_mask"][i, w] = plan.send_mask
+            for l in range(L):
+                out["edge_src"][l][i, w] = cb.edge_src[l]
+                out["edge_dst"][l][i, w] = cb.edge_dst[l]
+                out["edge_mask"][l][i, w] = cb.edge_mask[l]
+    return out
+
+
+def stack_caches(caches: Sequence[DeviceCache], dv: DeviceView,
+                 n_hot: int):
+    """Stack per-worker hot sets into (P, n_hot) ids + (P, n_hot, d) rows.
+
+    Ids stay sorted with CACHE_PAD tail padding (the device sentinel), so
+    the binary-search ``cache_lookup`` works shard-locally unchanged.
+    Raises when a cache exceeds ``n_hot``: the collation already routed
+    those ids through C_s, so dropping them here would silently train on
+    zero feature rows (same contract as build_pull_plan's overflow).
+    """
+    P_ = len(caches)
+    d = dv.table.shape[-1]
+    cids = np.full((P_, n_hot), CACHE_PAD, np.int64)
+    cfeats = np.zeros((P_, n_hot, d), np.float32)
+    for w, c in enumerate(caches):
+        k = c.ids.shape[0]
+        if k > n_hot:
+            raise ValueError(
+                f"worker {w} hot set has {k} ids > n_hot={n_hot}; "
+                f"truncating would serve zero rows for ids the pull "
+                f"plans treat as cache hits")
+        cids[w, :k] = c.ids
+        cfeats[w, :k] = c.feats
+    return cids, cfeats
+
+
+def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
+    """-> epoch_fn(params, opt_state, table, offsets, cache_ids,
+    cache_feats, batches) running S pipelined steps on the mesh.
+
+    Per scan step (DESIGN.md §6.3): pull step i+1's residual misses
+    (carried to the next iteration) while training on step i's features,
+    assembled local-first -> cache C_s -> pulled residuals; grads are
+    pmean'd over ``data`` so params stay replicated. Returns
+    (params, opt_state, losses (S,), accs (S,)).
+    """
+
+    def epoch_fn(params, opt_state, table, offsets, cache_ids,
+                 cache_feats, batches):
+
+        def device_epoch(params, opt_state, tbl, offs, cids, cfeats, bt):
+            tbl = tbl[0]                          # (n_per, d) my shard
+            n_per = tbl.shape[0]
+            base = offs.reshape(-1)[0]
+            cids32 = to_device_ids(cids[0])       # (n_hot,) sorted int32
+            cfe = cfeats[0]
+            bt = jax.tree.map(lambda a: a[:, 0], bt)   # drop worker dim
+
+            def pull(send):
+                return pull_shard(tbl, send["send_ids"], send["send_pos"],
+                                  send["send_mask"], base, m_max)
+
+            def assemble(pulled, ids):
+                q = to_device_ids(ids)
+                merged, _ = cache_lookup(cids32, cfe, q, pulled)
+                slot = q - base
+                local = (slot >= 0) & (slot < n_per)
+                rows = tbl[jnp.clip(slot, 0, n_per - 1)]
+                return jnp.where(local[:, None], rows, merged)
+
+            send = {k: bt[k] for k in ("send_ids", "send_pos", "send_mask")}
+            # prefetch stream: step i's body pulls step i+1's misses (the
+            # final roll wraps to step 0 -- one wasted pull, discarded)
+            xs = {
+                "input_nodes": bt["input_nodes"],
+                "labels": bt["labels"],
+                "seed_mask": bt["seed_mask"],
+                "edge_src": bt["edge_src"],
+                "edge_dst": bt["edge_dst"],
+                "edge_mask": bt["edge_mask"],
+                "next_send": jax.tree.map(
+                    lambda a: jnp.roll(a, -1, axis=0), send),
+            }
+            pulled0 = pull(jax.tree.map(lambda a: a[0], send))
+
+            def step(carry, x):
+                params, opt_state, pulled = carry
+                nxt = pull(x["next_send"])        # overlap: no dep on train
+                feats = assemble(pulled, x["input_nodes"])
+
+                def lf(p):
+                    return loss_fn(cfg, p, feats, x["edge_src"],
+                                   x["edge_dst"], x["edge_mask"],
+                                   x["labels"], x["seed_mask"])
+
+                (loss, acc), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params)
+                grads = jax.lax.pmean(grads, "data")
+                loss = jax.lax.pmean(loss, "data")
+                acc = jax.lax.pmean(acc, "data")
+                p2, o2 = opt.update(grads, opt_state, params)
+                return (p2, o2, nxt), (loss, acc)
+
+            (params, opt_state, _), (losses, accs) = jax.lax.scan(
+                step, (params, opt_state, pulled0), xs)
+            return params, opt_state, losses, accs
+
+        return shard_map(
+            device_epoch, mesh=mesh,
+            in_specs=(P(), P(), P("data"), P("data"), P("data"),
+                      P("data"), P(None, "data")),
+            out_specs=(P(), P(), P(), P()), check_rep=False,
+        )(params, opt_state, table, offsets, cache_ids, cache_feats,
+          batches)
+
+    return epoch_fn

@@ -1,0 +1,31 @@
+"""Mesh construction + axis conventions for the device-distributed path.
+
+Axis vocabulary (DESIGN.md §6): ``data`` is the RapidGNN worker axis --
+one mesh slot per paper "worker", holding that worker's feature-table
+partition, steady cache C_s, and batch stream. ``model`` (tensor/expert
+parallel) and ``pod`` (multi-pod data parallel) are the transformer
+substrate's axes. Everything here is a FUNCTION of an explicit shape so
+importing this module never touches jax device state (device count locks
+at first backend init; the dry-runs set XLA_FLAGS before importing jax).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Build a device mesh, e.g. ``make_mesh((4,), ("data",))``."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> Optional[Union[str, Tuple[str, ...]]]:
+    """The data-parallel axes of ``mesh`` as a PartitionSpec entry.
+
+    Returns a tuple of the present batch-sharding axes (``pod`` outermost,
+    then ``data``) or None when the mesh has neither -- usable directly as
+    one entry of a ``PartitionSpec``.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None

@@ -1,0 +1,116 @@
+"""NamedSharding factories for the production dry-runs (DESIGN.md §6.4).
+
+Consumed by ``launch/specs.py``: every (arch x shape) combo jits with
+explicit in/out shardings built here. The rules are deliberately simple
+and divisibility-guarded -- ``fit_spec`` drops any mesh axis whose extent
+does not divide the dimension, so one rule set covers all ten archs on
+both the 16x16 single-pod and 2x16x16 multi-pod meshes:
+
+  * params: column-parallel default -- widest trailing dim divisible by
+    ``model`` is sharded over it; stacked-layer leading dims (R) and
+    vocab rows stay unsharded.
+  * optimizer state: moments mirror the param shardings; scalars
+    replicate.
+  * batches: leading batch dim over the data-parallel axes (pod, data);
+    M-RoPE position streams (3, B, S) shard dim 1.
+  * decode state: batch dim over (pod, data) -- dim 1 for the stacked
+    scan caches (R, B, ...), dim 0 for tail caches (B, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.mesh import dp_axes
+
+
+def _extent(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def fit_spec(mesh, spec, shape) -> P:
+    """Drop spec entries whose mesh extent does not divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _extent(mesh, entry)
+        out.append(entry if (size > 1 and dim % size == 0) else None)
+    return P(*out)
+
+
+def param_shardings(cfg, mesh, params):
+    """Column-parallel default over ``model`` for every weight leaf."""
+    tp = mesh.shape.get("model", 1)
+
+    def leaf(x):
+        spec = [None] * x.ndim
+        if tp > 1:
+            for i in range(x.ndim - 1, 0, -1):   # never the leading dim:
+                if x.shape[i] % tp == 0 and x.shape[i] >= 2 * tp:
+                    spec[i] = "model"            # (R-stacks / vocab rows)
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, params)
+
+
+def opt_shardings(params_sh, opt_s):
+    """Optimizer-state shardings from the param shardings.
+
+    Fields whose pytree structure mirrors the params (AdamW mu/nu, SGD
+    momentum) inherit the param shardings; everything else (step
+    counters) replicates.
+    """
+    mesh = jax.tree.leaves(params_sh)[0].mesh
+    repl = NamedSharding(mesh, P())
+    p_struct = jax.tree.structure(params_sh)
+    fields = {}
+    for f in opt_s._fields:
+        sub = getattr(opt_s, f)
+        fields[f] = (params_sh if jax.tree.structure(sub) == p_struct
+                     else jax.tree.map(lambda _: repl, sub))
+    return type(opt_s)(**fields)
+
+
+def batch_shardings(cfg, mesh, batch: Dict[str, Any]):
+    """Input batches: batch dim over (pod, data), divisibility-guarded."""
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":               # (3, B, S)
+            spec = P(None, dp, None)
+        else:                                    # (B, ...)
+            spec = P(dp, *([None] * (v.ndim - 1)))
+        out[k] = NamedSharding(mesh, fit_spec(mesh, spec, v.shape))
+    return out
+
+
+def decode_state_shardings(cfg, mesh, state):
+    """Decode caches: batch dim over (pod, data).
+
+    ``scan`` leaves are stacked per pattern position (R, B, ...); tail
+    leaves are unstacked (B, ...). Sequence-dim sharding over ``model``
+    is applied inside ``serve.attention.sharded_decode_attention`` via
+    shard_map, not here.
+    """
+    dp = dp_axes(mesh)
+
+    def shard(x, batch_dim):
+        spec = [None] * x.ndim
+        if x.ndim > batch_dim:
+            spec[batch_dim] = dp
+        return NamedSharding(mesh, fit_spec(mesh, P(*spec), x.shape))
+
+    return {
+        "scan": jax.tree.map(lambda x: shard(x, 1 if x.ndim > 1 else 0),
+                             state["scan"]),
+        "tail": jax.tree.map(lambda x: shard(x, 0), state["tail"]),
+    }

@@ -2,7 +2,7 @@
 accounting identities (unit + property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.graph import load_dataset, partition_graph, KHopSampler
 from repro.graph.sampler import derive_seed, rng_from
