@@ -44,8 +44,7 @@ def device_path_bytes(dataset: str, batch_size: int, workers: int,
         es_list = [ws.epoch(e) for ws in ws_all]
         caches = [dv.remap_cache(es.cache_ids) for es in es_list]
         cache += es_list[worker].cache_ids.shape[0] * row   # VectorPull
-        k_max = epoch_k_max(es_list, caches, dv, g.labels, batch_size,
-                            0, [])
+        k_max = epoch_k_max(es_list, caches, dv)
         for b in es_list[worker].batches:
             dev, miss = _batch_miss(b, caches[worker], dv, worker)
             plan = build_pull_plan(dev[miss].astype(np.int32),

@@ -1,7 +1,7 @@
 """RapidGNN core: deterministic schedule, hot-set cache, prefetch pipeline."""
 from repro.core.schedule import (build_schedule, WorkerSchedule,
                                  EpochSchedule, CollatedBatch, collate,
-                                 epoch_edge_maxima)
+                                 epoch_edge_maxima, merge_pad_bounds)
 from repro.core.cache import FeatureCache, DoubleBufferCache
 from repro.core.fetch import ShardedFeatureStore
 from repro.core.prefetch import Prefetcher, SecondaryCacheBuilder, assemble_features
@@ -11,7 +11,8 @@ from repro.core.metrics import (EpochMetrics, RunMetrics, NetworkModel,
 
 __all__ = [
     "build_schedule", "WorkerSchedule", "EpochSchedule", "CollatedBatch",
-    "collate", "epoch_edge_maxima", "FeatureCache", "DoubleBufferCache",
+    "collate", "epoch_edge_maxima", "merge_pad_bounds", "FeatureCache",
+    "DoubleBufferCache",
     "ShardedFeatureStore", "Prefetcher", "SecondaryCacheBuilder",
     "assemble_features", "RapidGNNRunner", "BaselineRunner",
     "global_pad_bounds", "EpochMetrics", "RunMetrics", "NetworkModel",

@@ -32,9 +32,13 @@ class FeatureCache:
 
     def lookup(self, query: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """-> (positions, hit_mask); positions valid only where hit."""
+        query = np.asarray(query)
+        if self.ids.shape[0] == 0:      # indexing an empty table would raise
+            return (np.zeros(query.shape, np.intp),
+                    np.zeros(query.shape, bool))
         pos = np.searchsorted(self.ids, query)
-        pos_c = np.minimum(pos, max(self.ids.shape[0] - 1, 0))
-        hit = (self.ids.shape[0] > 0) & (self.ids[pos_c] == query)
+        pos_c = np.minimum(pos, self.ids.shape[0] - 1)
+        hit = self.ids[pos_c] == query
         return pos_c, hit
 
     def gather(self, query: np.ndarray, out: np.ndarray,

@@ -9,9 +9,10 @@ outruns the queue (the Prefetcher-Trainer race the paper describes); stall
 time is metered separately as critical-path fetch time.
 
 On TPU the same structure is realised as a software pipeline inside the
-step program (see repro/dist/pipeline.py); this host-thread version is the
-faithful reproduction of the paper's runtime and what the CPU benchmarks
-measure.
+step program (``repro/dist/gnn_step.py::make_pipelined_epoch``, driven
+across epochs by ``repro/dist/runner.py``); this host-thread version is
+the faithful reproduction of the paper's runtime and what the CPU
+benchmarks measure.
 """
 from __future__ import annotations
 
@@ -40,26 +41,34 @@ class StagedBatch:
         self.fetch_time = fetch_time
 
 
+def local_fill(cb: CollatedBatch, store: ShardedFeatureStore):
+    """Zeroed (m_max, d) buffer with this worker's LOCAL rows filled.
+
+    -> (out, rem_idx): rem_idx indexes the valid REMOTE slots still to be
+    served (padded -1 slots are neither local nor remote). Shared by the
+    cache-first assembly below and the baseline's per-occurrence path so
+    both fill local rows identically."""
+    ids = cb.input_nodes
+    valid = cb.input_mask
+    out = np.zeros((ids.shape[0], store.d), dtype=store.feat.dtype)
+    safe_ids = np.where(valid, ids, 0)
+    is_local = (store.pg.owner[safe_ids] == store.worker) & valid
+    if is_local.any():
+        out[is_local] = store.local_read(safe_ids[is_local])
+    return out, np.flatnonzero(valid & ~is_local)
+
+
 def assemble_features(cb: CollatedBatch, store: ShardedFeatureStore,
                       cache: Optional[FeatureCache], m: EpochMetrics,
                       critical_path: bool) -> np.ndarray:
     """Cache-first feature materialization for one batch (Alg.1 l.12-15)."""
     ids = cb.input_nodes
-    valid = cb.input_mask
-    out = np.zeros((ids.shape[0], store.d), dtype=store.feat.dtype)
-
-    safe_ids = np.where(valid, ids, 0)
-    is_local = (store.pg.owner[safe_ids] == store.worker) & valid
-    if is_local.any():
-        out[is_local] = store.local_read(safe_ids[is_local])
-
-    remote = valid & ~is_local
-    n_remote = int(remote.sum())
+    out, rem_idx = local_fill(cb, store)
+    n_remote = int(rem_idx.shape[0])
     m.remote_requests += n_remote
     if n_remote == 0:
         return out
 
-    rem_idx = np.flatnonzero(remote)
     rem_ids = ids[rem_idx]
     if cache is not None and cache.ids.shape[0] > 0:
         pos, hit = cache.lookup(rem_ids)

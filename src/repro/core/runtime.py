@@ -18,7 +18,7 @@ from repro.core.cache import DoubleBufferCache, FeatureCache
 from repro.core.fetch import ShardedFeatureStore
 from repro.core.metrics import EpochMetrics, NetworkModel, RunMetrics
 from repro.core.prefetch import (Prefetcher, SecondaryCacheBuilder,
-                                 StagedBatch, assemble_features)
+                                 StagedBatch, assemble_features, local_fill)
 from repro.core.schedule import WorkerSchedule, collate
 
 TrainFn = Callable[[np.ndarray, "CollatedBatch"], float]  # noqa: F821
@@ -95,6 +95,20 @@ class RapidGNNRunner:
         return self.dbc.device_bytes
 
 
+def occurrence_remote_ids(batch, owner: np.ndarray,
+                          worker: int) -> np.ndarray:
+    """Every remote node reference in a SampledBatch, one entry per
+    unmasked edge-level occurrence (a node sampled k times appears k
+    times). Every non-seed input node enters the batch through at least
+    one unmasked edge, so this is always a multiset superset of the
+    batch's unique remote set."""
+    refs = [batch.input_nodes[blk.edge_src[blk.edge_mask]]
+            for blk in batch.blocks]
+    cat = (np.concatenate(refs) if refs
+           else np.zeros(0, batch.input_nodes.dtype))
+    return cat[owner[cat] != worker]
+
+
 class BaselineRunner:
     """DGL-style on-demand path: synchronous un-cached remote fetch.
 
@@ -105,13 +119,32 @@ class BaselineRunner:
     """
 
     def __init__(self, ws: WorkerSchedule, store: ShardedFeatureStore,
-                 batch_size: int, train_fn: Optional[TrainFn] = None):
+                 batch_size: int, train_fn: Optional[TrainFn] = None,
+                 dedupe: bool = True):
         self.ws = ws
         self.store = store
         self.batch_size = batch_size
         self.train_fn = train_fn or (lambda feats, cb: 0.0)
+        self.dedupe = dedupe
         self.m_max, self.edge_max = global_pad_bounds(ws)
         self.metrics = RunMetrics()
+
+    def _assemble_per_occurrence(self, b, cb, m: EpochMetrics) -> np.ndarray:
+        """dedupe=False fetch: charge bytes/RPCs for every edge-level
+        occurrence of a remote node (redundant-RPC regime), then fill the
+        buffer once per unique slot. The charged occurrence multiset is a
+        superset of the unique remote set, so the filled rows' bytes are
+        fully accounted."""
+        store = self.store
+        out, rem_idx = local_fill(cb, store)
+        occ = occurrence_remote_ids(b, store.pg.owner, store.worker)
+        m.remote_requests += int(occ.shape[0])
+        m.cache_misses += int(occ.shape[0])
+        if occ.shape[0]:
+            store.sync_pull(occ, m, critical_path=True)
+        if rem_idx.shape[0]:
+            out[rem_idx] = store.feat[cb.input_nodes[rem_idx]]
+        return out
 
     def run(self) -> RunMetrics:
         labels = self.store.pg.graph.labels
@@ -123,8 +156,11 @@ class BaselineRunner:
                 t0 = time.perf_counter()
                 cb = collate(b, labels, self.batch_size, self.m_max,
                              self.edge_max)
-                feats = assemble_features(cb, self.store, cache=None,
-                                          m=m, critical_path=True)
+                if self.dedupe:
+                    feats = assemble_features(cb, self.store, cache=None,
+                                              m=m, critical_path=True)
+                else:
+                    feats = self._assemble_per_occurrence(b, cb, m)
                 m.fetch_stall_s += time.perf_counter() - t0
                 t1 = time.perf_counter()
                 self.train_fn(feats, cb)

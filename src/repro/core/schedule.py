@@ -71,14 +71,39 @@ class WorkerSchedule:
 
     def pad_bounds(self) -> Tuple[int, List[int]]:
         """Static (m_max, edge_maxima) across ALL epochs -> one XLA
-        compilation; served from cached metadata, never from spill_dir."""
+        compilation; served from cached metadata, never from spill_dir.
+        Empty epochs (all-zero or empty edge maxima) don't shrink the
+        merged bound."""
         metas = self._meta()
         m_max = max(m for m, _ in metas)
-        edge_max = None
+        edge_max: List[int] = []
         for _, em in metas:
-            edge_max = (list(em) if edge_max is None
-                        else [max(a, b) for a, b in zip(edge_max, em)])
+            edge_max = _merge_edge_maxima(edge_max, em)
         return m_max, edge_max
+
+
+def _merge_edge_maxima(acc: List[int], em: Sequence[int]) -> List[int]:
+    """Elementwise max-merge of per-layer edge maxima; an empty list
+    (epoch/worker with no batches) never shrinks the accumulator."""
+    if not em:
+        return acc
+    if not acc:
+        return list(em)
+    return [max(a, b) for a, b in zip(acc, em)]
+
+
+def merge_pad_bounds(
+        schedules: Sequence["WorkerSchedule"]) -> Tuple[int, List[int]]:
+    """Global static (m_max, edge_maxima) across WORKERS: max-merge each
+    schedule's all-epoch ``pad_bounds()``, skipping all-empty workers'
+    empty edge lists -- the one-compilation bound the multi-epoch device
+    runner collates every epoch to."""
+    m_max, edge_max = 0, []
+    for ws in schedules:
+        m, em = ws.pad_bounds()
+        m_max = max(m_max, m)
+        edge_max = _merge_edge_maxima(edge_max, em)
+    return m_max, edge_max
 
 
 def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
@@ -121,7 +146,9 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     epoch_meta: List[Tuple[int, List[int]]] = []
     for e in range(num_epochs):
         es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot)
-        epoch_meta.append((es.m_max, epoch_edge_maxima(es)))
+        epoch_meta.append((es.m_max,
+                           epoch_edge_maxima(es,
+                                             num_layers=len(sampler.fanouts))))
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
             with open(os.path.join(spill_dir, f"w{worker}_e{e}.pkl"),
@@ -191,7 +218,16 @@ def collate(batch: SampledBatch, labels: np.ndarray, batch_size: int,
                          num_dst=ndst)
 
 
-def epoch_edge_maxima(es: EpochSchedule) -> List[int]:
+def epoch_edge_maxima(es: EpochSchedule,
+                      num_layers: Optional[int] = None) -> List[int]:
+    """Per-layer max padded edge count over the epoch's batches.
+
+    An epoch with no batches (a worker whose partition holds no train
+    nodes) has no blocks to take the layer count from: with
+    ``num_layers`` given it contributes all-zero maxima, otherwise an
+    empty list -- ``pad_bounds`` skips both when merging."""
+    if not es.batches:
+        return [0] * (num_layers or 0)
     L = len(es.batches[0].blocks)
     return [max(b.blocks[l].edge_src.shape[0] for b in es.batches)
             for l in range(L)]

@@ -14,7 +14,11 @@ from repro.dist.feature_a2a import (PullPlan, build_pull_plan, pull_shard,
                                     pull_features, cache_gather)
 from repro.dist.gnn_step import (CACHE_PAD, DeviceCache, DeviceView,
                                  epoch_k_max, collate_device_epoch,
-                                 stack_caches, make_pipelined_epoch)
+                                 stack_caches, make_pipelined_epoch,
+                                 make_ondemand_epoch, empty_caches)
+from repro.dist.runner import (DeviceEpochReport, DeviceRapidGNNRunner,
+                               DeviceBaselineRunner, host_miss_matrix,
+                               assert_host_parity)
 from repro.dist.shardings import (fit_spec, param_shardings, opt_shardings,
                                   batch_shardings, decode_state_shardings)
 
@@ -24,6 +28,9 @@ __all__ = [
     "cache_gather",
     "CACHE_PAD", "DeviceCache", "DeviceView", "epoch_k_max",
     "collate_device_epoch", "stack_caches", "make_pipelined_epoch",
+    "make_ondemand_epoch", "empty_caches",
+    "DeviceEpochReport", "DeviceRapidGNNRunner", "DeviceBaselineRunner",
+    "host_miss_matrix", "assert_host_parity",
     "fit_spec", "param_shardings", "opt_shardings", "batch_shardings",
     "decode_state_shardings",
 ]

@@ -101,10 +101,14 @@ def _batch_miss(es_batch, cache: DeviceCache, dv: DeviceView, worker: int):
 
 
 def epoch_k_max(es_list: Sequence[EpochSchedule],
-                caches: Sequence[DeviceCache], dv: DeviceView,
-                labels: np.ndarray, batch_size: int, m_max: int,
-                edge_max: Sequence[int]) -> int:
-    """Exact static per-owner lane bound over all (worker, step) pairs."""
+                caches: Sequence[DeviceCache], dv: DeviceView) -> int:
+    """Exact static per-owner lane bound over all (worker, step) pairs.
+
+    Pad bounds (m_max / edge maxima) are NOT recomputed here -- callers
+    precompute them once via ``WorkerSchedule.pad_bounds()`` (the
+    multi-epoch runner maxes this over every epoch's caches so all
+    epochs share one compiled program). Workers with fewer batches
+    simply contribute fewer (worker, step) pairs."""
     k = 1
     for w, es in enumerate(es_list):
         for b in es.batches:
@@ -125,10 +129,26 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     Per (step, worker): the padded collated batch (ids remapped to
     device space, -1 padded) plus the residual-miss PullPlan lanes.
     Layout matches launch/dryrun_gnn.specs exactly.
+
+    ``m_max``/``edge_max``/``k_max``/``num_steps`` are precomputed
+    bounds -- the multi-epoch runner passes GLOBAL (all-epoch, all-
+    worker) values so every epoch collates to identical shapes and one
+    XLA compilation. A worker with fewer than ``num_steps`` batches
+    (uneven train-node partitions, possibly zero batches) gets fully
+    masked empty steps for the tail: ids -1, all masks False, so it
+    still participates in every collective but trains on nothing.
+    Raises when a worker has MORE batches than ``num_steps`` (silent
+    truncation would corrupt the fetch accounting).
     """
     P_ = len(es_list)
     S = num_steps
     L = len(edge_max)
+    over = [w for w, es in enumerate(es_list) if len(es.batches) > S]
+    if over:
+        raise ValueError(
+            f"workers {over} have more batches than num_steps={S}; "
+            f"pass num_steps >= max worker batch count "
+            f"(dropping steps would corrupt miss accounting)")
     out = {
         "input_nodes": np.full((S, P_, m_max), -1, np.int64),
         "labels": np.zeros((S, P_, batch_size), np.int32),
@@ -142,7 +162,7 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     }
     owner_d = dv.owner_d
     for w, es in enumerate(es_list):
-        for i in range(S):
+        for i in range(len(es.batches)):
             b = es.batches[i]
             cb = collate(b, labels, batch_size, m_max, edge_max)
             dev, miss = _batch_miss(b, caches[w], dv, w)
@@ -189,6 +209,33 @@ def stack_caches(caches: Sequence[DeviceCache], dv: DeviceView,
     return cids, cfeats
 
 
+def _local_merge(tbl, base, q, fallback):
+    """Overlay this worker's shard rows onto ``fallback`` where the
+    queried device id is locally owned (slot in [0, n_per)); padding ids
+    (-1) are never local. Shared by both epoch programs so the
+    rapid-vs-baseline comparison assembles features identically."""
+    n_per = tbl.shape[0]
+    slot = q - base
+    local = (slot >= 0) & (slot < n_per)
+    rows = tbl[jnp.clip(slot, 0, n_per - 1)]
+    return jnp.where(local[:, None], rows, fallback)
+
+
+def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x):
+    """Shared scan-body tail for both epoch programs: batch loss/grad,
+    pmean over ``data`` (params stay replicated), optimizer update.
+    -> (params, opt_state, loss, acc)."""
+
+    def lf(p):
+        return loss_fn(cfg, p, feats, x["edge_src"], x["edge_dst"],
+                       x["edge_mask"], x["labels"], x["seed_mask"])
+
+    (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    grads, loss, acc = jax.lax.pmean((grads, loss, acc), "data")
+    p2, o2 = opt.update(grads, opt_state, params)
+    return p2, o2, loss, acc
+
+
 def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
     """-> epoch_fn(params, opt_state, table, offsets, cache_ids,
     cache_feats, batches) running S pipelined steps on the mesh.
@@ -205,7 +252,6 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
 
         def device_epoch(params, opt_state, tbl, offs, cids, cfeats, bt):
             tbl = tbl[0]                          # (n_per, d) my shard
-            n_per = tbl.shape[0]
             base = offs.reshape(-1)[0]
             cids32 = to_device_ids(cids[0])       # (n_hot,) sorted int32
             cfe = cfeats[0]
@@ -218,10 +264,7 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
             def assemble(pulled, ids):
                 q = to_device_ids(ids)
                 merged, _ = cache_lookup(cids32, cfe, q, pulled)
-                slot = q - base
-                local = (slot >= 0) & (slot < n_per)
-                rows = tbl[jnp.clip(slot, 0, n_per - 1)]
-                return jnp.where(local[:, None], rows, merged)
+                return _local_merge(tbl, base, q, merged)
 
             send = {k: bt[k] for k in ("send_ids", "send_pos", "send_mask")}
             # prefetch stream: step i's body pulls step i+1's misses (the
@@ -242,18 +285,8 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
                 params, opt_state, pulled = carry
                 nxt = pull(x["next_send"])        # overlap: no dep on train
                 feats = assemble(pulled, x["input_nodes"])
-
-                def lf(p):
-                    return loss_fn(cfg, p, feats, x["edge_src"],
-                                   x["edge_dst"], x["edge_mask"],
-                                   x["labels"], x["seed_mask"])
-
-                (loss, acc), grads = jax.value_and_grad(
-                    lf, has_aux=True)(params)
-                grads = jax.lax.pmean(grads, "data")
-                loss = jax.lax.pmean(loss, "data")
-                acc = jax.lax.pmean(acc, "data")
-                p2, o2 = opt.update(grads, opt_state, params)
+                p2, o2, loss, acc = _pmean_train_step(
+                    cfg, opt, params, opt_state, feats, x)
                 return (p2, o2, nxt), (loss, acc)
 
             (params, opt_state, _), (losses, accs) = jax.lax.scan(
@@ -269,3 +302,61 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
           batches)
 
     return epoch_fn
+
+
+def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
+    """-> epoch_fn(params, opt_state, table, offsets, batches): the
+    DGL-style on-demand baseline as a NON-overlapped scan.
+
+    Same mesh, same pull-plan wire format, same train step as
+    ``make_pipelined_epoch`` -- but no cache C_s and no software
+    pipeline: step i's all_to_all pull feeds step i's own features, so
+    the collective sits on the trainer's critical path every step. This
+    is the device analogue of ``core.runtime.BaselineRunner``, making
+    device rapid-vs-baseline step time directly measurable
+    (DESIGN.md §6.5). Collate its batches with EMPTY caches so every
+    remote id rides the pull lanes.
+    """
+
+    def epoch_fn(params, opt_state, table, offsets, batches):
+
+        def device_epoch(params, opt_state, tbl, offs, bt):
+            tbl = tbl[0]                          # (n_per, d) my shard
+            base = offs.reshape(-1)[0]
+            bt = jax.tree.map(lambda a: a[:, 0], bt)   # drop worker dim
+
+            def step(carry, x):
+                params, opt_state = carry
+                # pull THIS step's remote rows: the train step below
+                # depends on it, so nothing overlaps (on-demand fetch)
+                pulled = pull_shard(tbl, x["send_ids"], x["send_pos"],
+                                    x["send_mask"], base, m_max)
+                q = to_device_ids(x["input_nodes"])
+                feats = _local_merge(tbl, base, q, pulled)
+                p2, o2, loss, acc = _pmean_train_step(
+                    cfg, opt, params, opt_state, feats, x)
+                return (p2, o2), (loss, acc)
+
+            xs = {k: bt[k] for k in
+                  ("input_nodes", "labels", "seed_mask", "send_ids",
+                   "send_pos", "send_mask", "edge_src", "edge_dst",
+                   "edge_mask")}
+            (params, opt_state), (losses, accs) = jax.lax.scan(
+                step, (params, opt_state), xs)
+            return params, opt_state, losses, accs
+
+        return shard_map(
+            device_epoch, mesh=mesh,
+            in_specs=(P(), P(), P("data"), P("data"), P(None, "data")),
+            out_specs=(P(), P(), P(), P()), check_rep=False,
+        )(params, opt_state, table, offsets, batches)
+
+    return epoch_fn
+
+
+def empty_caches(num_parts: int, feat_dim: int) -> List[DeviceCache]:
+    """Per-worker EMPTY hot sets: the no-cache (baseline) collation key.
+    ``_batch_miss`` then routes every remote id through the pull lanes."""
+    return [DeviceCache(ids=np.zeros(0, np.int64),
+                        feats=np.zeros((0, feat_dim), np.float32))
+            for _ in range(num_parts)]

@@ -1,0 +1,257 @@
+"""Multi-epoch device runners: Alg. 1's epoch loop on the SPMD mesh.
+
+``DeviceRapidGNNRunner`` drives N epochs through ``make_pipelined_epoch``
+with the paper's double-buffer protocol (DESIGN.md §6.5): while epoch e
+trains on device against C_s, the host stages epoch e+1's C_sec
+(``remap_cache`` + ``stack_caches``) and pull plans -- jax dispatch is
+asynchronous, so the staging genuinely overlaps the device epoch, the
+device analogue of ``core.prefetch.SecondaryCacheBuilder`` -- and the
+staged buffers swap in at the epoch boundary (Alg. 1 l.18).
+
+Every epoch is collated to GLOBAL static bounds: ``WorkerSchedule.
+pad_bounds()`` merged across workers, one ``k_max`` maxed over every
+epoch's caches, and ``num_steps`` = the max worker batch count (short
+workers get fully masked empty steps). All N epochs therefore run ONE
+compiled program -- ``trace_count`` stays 1.
+
+``DeviceBaselineRunner`` is the same loop over ``make_ondemand_epoch``
+with EMPTY caches: no C_s, no software pipeline, every remote id pulled
+on the critical path -- the DGL-style on-demand path, so device
+rapid-vs-baseline step time is measurable on the same mesh.
+
+``assert_host_parity`` checks the device runner's per-epoch residual-miss
+lane counts against the host-sim ``RapidGNNRunner``'s ``cache_misses``
+batch-exact on the identical schedule (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import WorkerSchedule, merge_pad_bounds
+from repro.models.gnn import GNNConfig, init_params
+from repro.dist.gnn_step import (DeviceCache, DeviceView,
+                                 collate_device_epoch, empty_caches,
+                                 epoch_k_max, make_ondemand_epoch,
+                                 make_pipelined_epoch, stack_caches)
+
+
+@dataclasses.dataclass
+class DeviceEpochReport:
+    """Per-epoch accounting from one device runner epoch."""
+    epoch: int
+    steps: int                  # scan length (global, padded)
+    miss_lanes: np.ndarray      # (P,) residual-miss pull lanes per worker
+    wire_rows: int              # padded rows the a2a actually moves
+    losses: np.ndarray          # (S,) pmean'd per step
+    accs: np.ndarray            # (S,)
+    wall_time_s: float
+
+    @property
+    def total_miss_lanes(self) -> int:
+        return int(self.miss_lanes.sum())
+
+    def payload_bytes(self, feat_dim: int, itemsize: int = 4) -> int:
+        """True feature bytes requested (== host-sim remote_bytes)."""
+        return self.total_miss_lanes * feat_dim * itemsize
+
+
+class _DeviceRunnerBase:
+    """Shared epoch-loop machinery; subclasses pick program + caches."""
+
+    uses_cache = True
+    pulls_beyond_steps = 0      # a2a pulls per epoch in excess of S steps
+
+    def __init__(self, schedules: Sequence[WorkerSchedule], dv: DeviceView,
+                 cfg: GNNConfig, opt, mesh, batch_size: int,
+                 labels: np.ndarray, seed: int = 0):
+        self.schedules = list(schedules)
+        self.P = len(self.schedules)
+        if mesh.devices.size != self.P:
+            raise ValueError(f"{self.P} schedules for a "
+                             f"{mesh.devices.size}-device mesh")
+        n_epochs = {len(ws.epochs) for ws in self.schedules}
+        if len(n_epochs) != 1:
+            raise ValueError(f"workers disagree on epoch count: {n_epochs}")
+        self.num_epochs = n_epochs.pop()
+        self.dv = dv
+        self.cfg = cfg
+        self.opt = opt
+        self.mesh = mesh
+        self.batch_size = batch_size
+        self.labels = labels
+        self.seed = seed
+
+        # global static bounds: pad_bounds merged across workers, steps /
+        # lane bound maxed over every (worker, epoch) -- the
+        # one-compilation key (per-epoch bounds would retrigger tracing).
+        # One pass loads each (worker, epoch) once (spilled schedules
+        # unpickle here and once more when the epoch is staged). Only the
+        # bound SCALARS are retained: cache feature rows are rebuilt per
+        # staged epoch so at most two epochs' C_s/C_sec are live at once
+        # (the paper's 2*n_hot*d memory bound, not E*n_hot*d).
+        self.m_max, self.edge_max = merge_pad_bounds(self.schedules)
+        self.n_hot = max(1, max(ws.n_hot for ws in self.schedules))
+        self.num_steps, self.k_max = 0, 1
+        for e in range(self.num_epochs):
+            es_list = [ws.epoch(e) for ws in self.schedules]
+            # ids-only cache view: the lane bound never touches feats
+            ids_only = self._caches_for(es_list, ids_only=True)
+            self.num_steps = max(self.num_steps,
+                                 max(es.num_batches for es in es_list))
+            self.k_max = max(self.k_max,
+                             epoch_k_max(es_list, ids_only, self.dv))
+
+        self.trace_count = 0
+        self._fn = jax.jit(self._counted(self._make_epoch_fn()))
+        self.params: Optional[Any] = None
+        self.opt_state: Optional[Any] = None
+
+    def _caches_for(self, es_list, ids_only: bool = False
+                    ) -> List[DeviceCache]:
+        d = self.dv.table.shape[-1]
+        if not self.uses_cache:
+            return empty_caches(self.P, d)
+        if ids_only:
+            return [DeviceCache(ids=np.sort(self.dv.g2d[es.cache_ids]),
+                                feats=np.zeros((0, d), np.float32))
+                    for es in es_list]
+        return [self.dv.remap_cache(es.cache_ids) for es in es_list]
+
+    def _counted(self, fn):
+        def wrapped(*args):
+            self.trace_count += 1   # fires once per XLA trace, not per call
+            return fn(*args)
+        return wrapped
+
+    # -- per-epoch staging (the host half of the double buffer) ---------
+
+    def _stage(self, e: int) -> Dict[str, Any]:
+        es_list = [ws.epoch(e) for ws in self.schedules]
+        caches = self._caches_for(es_list)
+        batches = collate_device_epoch(
+            es_list, caches, self.dv, self.labels, self.batch_size,
+            self.m_max, self.edge_max, self.k_max, self.num_steps)
+        # (S, P, P, k) -> per-requesting-worker true lane counts
+        lanes = batches["send_mask"].sum(axis=(0, 2, 3)).astype(np.int64)
+        # padded rows the program's all_to_alls move: the pipelined epoch
+        # issues one extra pull (the pre-scan pulled0; its final wrap pull
+        # is part of the S in-scan pulls), the on-demand epoch exactly S
+        S, P_, _, k = batches["send_mask"].shape
+        staged = {
+            "batches": jax.tree.map(jnp.asarray, batches),
+            "lanes": lanes,
+            "wire_rows": (S + self.pulls_beyond_steps) * P_ * P_ * k,
+        }
+        if self.uses_cache:
+            cids, cfeats = stack_caches(caches, self.dv, self.n_hot)
+            staged["cids"] = jnp.asarray(cids)
+            staged["cfeats"] = jnp.asarray(cfeats)
+        return staged
+
+    # -- the epoch loop --------------------------------------------------
+
+    def run(self, params=None, opt_state=None) -> List[DeviceEpochReport]:
+        if params is None:
+            params = init_params(self.cfg, jax.random.key(self.seed))
+        if opt_state is None:
+            opt_state = self.opt.init(params)
+        table = jnp.asarray(self.dv.table)
+        offsets = jnp.asarray(self.dv.offsets)
+        reports: List[DeviceEpochReport] = []
+        staged = self._stage(0)         # bootstrap C_s (Alg. 1 l.4)
+        with self.mesh:
+            for e in range(self.num_epochs):
+                t0 = time.perf_counter()
+                params, opt_state, losses, accs = self._run_epoch(
+                    params, opt_state, table, offsets, staged)
+                # dispatch is async: stage epoch e+1's C_sec + plans on
+                # the host WHILE the device trains epoch e ...
+                nxt = (self._stage(e + 1)
+                       if e + 1 < self.num_epochs else None)
+                losses = np.asarray(losses)     # block on the device epoch
+                accs = np.asarray(accs)
+                reports.append(DeviceEpochReport(
+                    epoch=e, steps=self.num_steps,
+                    miss_lanes=staged["lanes"],
+                    wire_rows=staged["wire_rows"],
+                    losses=losses, accs=accs,
+                    wall_time_s=time.perf_counter() - t0))
+                staged = nxt            # ... and swap at the boundary
+        self.params, self.opt_state = params, opt_state
+        return reports
+
+    # subclass hooks ------------------------------------------------------
+
+    def _make_epoch_fn(self):
+        raise NotImplementedError
+
+    def _run_epoch(self, params, opt_state, table, offsets, staged):
+        raise NotImplementedError
+
+
+class DeviceRapidGNNRunner(_DeviceRunnerBase):
+    """Paper Alg. 1 on the mesh: C_s/C_sec double buffer + pipelined pull."""
+
+    uses_cache = True
+    pulls_beyond_steps = 1      # the pre-scan pulled0 priming the pipeline
+
+    def _make_epoch_fn(self):
+        return make_pipelined_epoch(self.cfg, self.opt, self.mesh,
+                                    self.m_max)
+
+    def _run_epoch(self, params, opt_state, table, offsets, staged):
+        return self._fn(params, opt_state, table, offsets, staged["cids"],
+                        staged["cfeats"], staged["batches"])
+
+
+class DeviceBaselineRunner(_DeviceRunnerBase):
+    """DGL-style on-demand path: no cache, pull on the critical path."""
+
+    uses_cache = False
+
+    def _make_epoch_fn(self):
+        return make_ondemand_epoch(self.cfg, self.opt, self.mesh,
+                                   self.m_max)
+
+    def _run_epoch(self, params, opt_state, table, offsets, staged):
+        return self._fn(params, opt_state, table, offsets,
+                        staged["batches"])
+
+
+def host_miss_matrix(schedules: Sequence[WorkerSchedule], pg,
+                     batch_size: int) -> np.ndarray:
+    """(E, P) host-sim ``cache_misses`` per (epoch, worker): every worker
+    run through ``core.runtime.RapidGNNRunner`` on the same schedule."""
+    from repro.core.fetch import ShardedFeatureStore
+    from repro.core.metrics import NetworkModel
+    from repro.core.runtime import RapidGNNRunner
+
+    E = len(schedules[0].epochs)
+    out = np.zeros((E, len(schedules)), np.int64)
+    for w, ws in enumerate(schedules):
+        store = ShardedFeatureStore(pg, worker=w,
+                                    net=NetworkModel(enabled=False))
+        m = RapidGNNRunner(ws, store, batch_size=batch_size).run()
+        out[:, w] = [em.cache_misses for em in m.epochs]
+    return out
+
+
+def assert_host_parity(schedules: Sequence[WorkerSchedule], pg,
+                       batch_size: int,
+                       reports: Sequence[DeviceEpochReport]) -> np.ndarray:
+    """Device residual-miss lanes == host-sim cache_misses, per (epoch,
+    worker). The two paths count the SAME miss sets from independent code
+    (numpy searchsorted vs pull-plan lanes), so equality pins the device
+    fetch accounting to the paper's (DESIGN.md §7). Returns the matrix."""
+    host = host_miss_matrix(schedules, pg, batch_size)
+    dev = np.stack([r.miss_lanes for r in reports])
+    np.testing.assert_array_equal(
+        dev, host,
+        err_msg="device pull-lane counts diverge from host cache_misses")
+    return host

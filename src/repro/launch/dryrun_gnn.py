@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.models.gnn import GNNConfig
 from repro.train.optim import AdamW
-from repro.dist.gnn_step import make_pipelined_epoch
+from repro.dist.gnn_step import make_ondemand_epoch, make_pipelined_epoch
 from repro.launch.dryrun import collective_bytes
 
 
@@ -52,6 +52,9 @@ def specs(P_, S, m_max, edge_max, B, n_per, d, n_hot, k_max, n_classes):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="lower the on-demand (no cache, non-overlapped) "
+                         "baseline epoch instead of the pipelined one")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
     P_ = 512 if args.multi_pod else 256
@@ -70,19 +73,26 @@ def main() -> None:
                              ).init_params(cfg, k), jax.random.key(0))
     opt_s = jax.eval_shape(opt.init, params_s)
 
-    epoch_fn = make_pipelined_epoch(cfg, opt, mesh, m_max)
     table, offsets, cids, cfeats, batches = specs(
         P_, S, m_max, edge_max, B, n_per, d, n_hot, k_max, 172)
 
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(epoch_fn).lower(params_s, opt_s, table, offsets,
-                                          cids, cfeats, batches)
+        if args.baseline:
+            epoch_fn = make_ondemand_epoch(cfg, opt, mesh, m_max)
+            lowered = jax.jit(epoch_fn).lower(params_s, opt_s, table,
+                                              offsets, batches)
+        else:
+            epoch_fn = make_pipelined_epoch(cfg, opt, mesh, m_max)
+            lowered = jax.jit(epoch_fn).lower(params_s, opt_s, table,
+                                              offsets, cids, cfeats,
+                                              batches)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cl = collective_bytes(compiled.as_text())
     rec = {
-        "workload": "rapidgnn-sage", "workers": P_,
+        "workload": ("rapidgnn-sage-ondemand" if args.baseline
+                     else "rapidgnn-sage"), "workers": P_,
         "mesh": f"{P_} (data)",
         "compile_s": round(time.time() - t0, 1),
         "memory": {
@@ -96,6 +106,8 @@ def main() -> None:
     }
     os.makedirs(args.out, exist_ok=True)
     tag = f"rapidgnn_gnn__pod{2 if args.multi_pod else 1}"
+    if args.baseline:
+        tag += "__ondemand"
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
     print(json.dumps(rec, indent=1))

@@ -62,8 +62,8 @@ def check_pipelined_gnn_epoch():
         edge_max = em if edge_max is None else [max(a, b) for a, b
                                                 in zip(edge_max, em)]
     caches = [dv.remap_cache(es.cache_ids) for es in es_list]
-    S = min(es.num_batches for es in es_list)
-    k_max = epoch_k_max(es_list, caches, dv, g.labels, B, m_max, edge_max)
+    S = max(es.num_batches for es in es_list)
+    k_max = epoch_k_max(es_list, caches, dv)
     batches = collate_device_epoch(es_list, caches, dv, g.labels, B,
                                    m_max, edge_max, k_max, S)
     cids, cfeats = stack_caches(caches, dv, n_hot)
@@ -83,6 +83,108 @@ def check_pipelined_gnn_epoch():
     assert not np.isnan(losses).any()
     assert losses[-1] < losses[0]
     print("pipelined_gnn_epoch OK")
+
+
+def _runner_setup(P_=4, B=16, epochs=3, n_hot=64, uneven=False):
+    from repro.dist import make_mesh
+
+    if uneven:
+        from _uneven import build_uneven_case
+        g, pg, schedules, dv = build_uneven_case(P_=P_, B=B, epochs=epochs,
+                                                 n_hot=n_hot)
+    else:
+        from repro.graph import load_dataset, partition_graph, KHopSampler
+        from repro.core import build_schedule
+        from repro.dist import DeviceView
+
+        g = load_dataset("tiny")
+        pg = partition_graph(g, P_, "greedy")
+        sampler = KHopSampler(g, fanouts=[5, 5], batch_size=B)
+        schedules = [build_schedule(sampler, pg, worker=w, s0=7,
+                                    num_epochs=epochs, n_hot=n_hot)
+                     for w in range(P_)]
+        dv = DeviceView.build(pg)
+    mesh = make_mesh((P_,), ("data",))
+    return g, pg, schedules, dv, mesh
+
+
+def _make_runner(cls, g, schedules, dv, mesh, B):
+    from repro.models import GNNConfig
+    from repro.train import AdamW
+    cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=32,
+                    num_classes=g.num_classes, num_layers=2)
+    return cls(schedules, dv, cfg, AdamW(lr=3e-3), mesh, B, g.labels)
+
+
+def check_device_runner():
+    """Multi-epoch double-buffer runner: one compilation, host-parity
+    miss accounting, C_sec swap shrinking epoch-1 pull lanes, and
+    rapid == baseline training curves (identical schedule)."""
+    from repro.dist import (DeviceRapidGNNRunner, DeviceBaselineRunner,
+                            assert_host_parity, collate_device_epoch,
+                            epoch_k_max)
+
+    B, epochs = 16, 3
+    g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs)
+    runner = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    reports = runner.run()
+    assert len(reports) == epochs
+    assert runner.trace_count == 1, \
+        f"expected ONE XLA trace across {epochs} epochs, got " \
+        f"{runner.trace_count}"
+    losses = np.concatenate([r.losses for r in reports])
+    assert not np.isnan(losses).any()
+    assert reports[-1].losses[-1] < reports[0].losses[0]
+
+    # per-(epoch, worker) residual-miss lanes == host-sim cache_misses
+    assert_host_parity(schedules, pg, B, reports)
+
+    # double-buffer effect: epoch 1 collated against the SWAPPED-in
+    # C_sec beats the no-swap counterfactual (stuck on epoch 0's C_s)
+    caches0 = [dv.remap_cache(ws.epoch(0).cache_ids) for ws in schedules]
+    es1 = [ws.epoch(1) for ws in schedules]
+    k_stale = max(runner.k_max, epoch_k_max(es1, caches0, dv))
+    stale = collate_device_epoch(es1, caches0, dv, g.labels, B,
+                                 runner.m_max, runner.edge_max, k_stale,
+                                 runner.num_steps)
+    stale_lanes = int(stale["send_mask"].sum())
+    assert reports[1].total_miss_lanes < stale_lanes, \
+        f"swap did not shrink epoch-1 pull lanes: " \
+        f"{reports[1].total_miss_lanes} vs stale {stale_lanes}"
+
+    baseline = _make_runner(DeviceBaselineRunner, g, schedules, dv, mesh, B)
+    rep_b = baseline.run()
+    assert baseline.trace_count == 1
+    # no cache: every remote id rides the lanes, so never fewer
+    for r, b in zip(reports, rep_b):
+        assert b.total_miss_lanes >= r.total_miss_lanes
+    # identical schedule + exact feature paths => identical curves
+    np.testing.assert_allclose(
+        np.concatenate([r.losses for r in reports]),
+        np.concatenate([r.losses for r in rep_b]), rtol=1e-4, atol=1e-5)
+    print("device_runner OK")
+
+
+def check_uneven_workers():
+    """Workers with fewer/zero batches get fully masked empty steps and
+    still match host-sim accounting (pre-fix: IndexError in
+    collate_device_epoch / epoch_edge_maxima)."""
+    from repro.dist import DeviceRapidGNNRunner, assert_host_parity
+
+    B, epochs = 16, 2
+    g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs,
+                                               uneven=True)
+    assert schedules[2].epoch(0).num_batches == 0
+    assert schedules[3].epoch(0).num_batches < \
+        schedules[0].epoch(0).num_batches
+    runner = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    reports = runner.run()
+    assert runner.trace_count == 1
+    for r in reports:
+        assert not np.isnan(r.losses).any()
+        assert r.miss_lanes[2] == 0         # no batches -> no pulls
+    assert_host_parity(schedules, pg, B, reports)
+    print("uneven_workers OK")
 
 
 def check_moe_expert_parallel():
@@ -126,6 +228,8 @@ if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     checks = {"pull": check_pull_features,
               "epoch": check_pipelined_gnn_epoch,
+              "runner": check_device_runner,
+              "uneven": check_uneven_workers,
               "moe": check_moe_expert_parallel,
               "decode": check_sharded_decode_attention}
     if which == "all":

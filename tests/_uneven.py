@@ -1,0 +1,31 @@
+"""Shared uneven-train-partition scenario: worker 2 trains on NOTHING
+(zero batches per epoch), worker 3 on half a batch. Used by both the
+host-side collation tests (tests/test_device_runner.py) and the on-mesh
+subprocess checks (tests/_dist_checks.py) so they cover the identical
+case."""
+import dataclasses
+
+
+def build_uneven_case(P_=4, B=16, epochs=2, n_hot=64, s0=7):
+    """-> (graph, partitioned_graph, worker schedules, DeviceView)."""
+    from repro.graph import load_dataset, partition_graph, KHopSampler
+    from repro.core import build_schedule
+    from repro.dist import DeviceView
+
+    g = load_dataset("tiny")
+    # load_dataset caches: replace the graph before editing train_mask so
+    # other tests sharing the cached instance stay unaffected
+    g = dataclasses.replace(g, train_mask=g.train_mask.copy())
+    pg = partition_graph(g, P_, "greedy")
+    tm = g.train_mask.copy()
+    tm[pg.local_nodes[2]] = False
+    l3 = pg.local_nodes[3]
+    keep = l3[tm[l3]][: B // 2]
+    tm[l3] = False
+    tm[keep] = True
+    g.train_mask = tm
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=B)
+    schedules = [build_schedule(sampler, pg, worker=w, s0=s0,
+                                num_epochs=epochs, n_hot=n_hot)
+                 for w in range(P_)]
+    return g, pg, schedules, DeviceView.build(pg)

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow      # compiles every arch end-to-end
+
 from repro.configs import ARCH_NAMES, get_reduced
 from repro.models.transformer import (init_params, forward, encode,
                                       lm_loss, init_decode_state,

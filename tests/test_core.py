@@ -10,6 +10,8 @@ from repro.core import (build_schedule, ShardedFeatureStore,
                         RapidGNNRunner, BaselineRunner, NetworkModel,
                         FeatureCache, collate, global_pad_bounds,
                         assemble_features, EpochMetrics)
+from repro.core.cache import EMPTY
+from repro.core.runtime import occurrence_remote_ids
 
 
 @pytest.fixture(scope="module")
@@ -117,7 +119,65 @@ def test_feature_cache_lookup_correct():
     assert np.allclose(feats[3], fc.feats[pos[0]])
 
 
+def test_empty_cache_lookup_is_all_miss():
+    """Regression: lookup/gather on a 0-entry cache raised IndexError
+    (ids[pos_c] evaluated on an empty table) -- must short-circuit to an
+    all-miss result, including for the EMPTY singleton."""
+    q = np.array([5, 0, 999], np.int64)
+    for fc in (EMPTY, FeatureCache(np.zeros(0, np.int64),
+                                   np.zeros((0, 4), np.float32))):
+        pos, hit = fc.lookup(q)
+        assert pos.shape == q.shape and hit.shape == q.shape
+        assert not hit.any()
+        out = np.ones((3, fc.feats.shape[1]), np.float32)
+        h = fc.gather(q, out)
+        assert not h.any()
+        np.testing.assert_allclose(out, 1.0)    # untouched
+    # scalar query path
+    _, hit = EMPTY.lookup(np.int64(7))
+    assert not bool(hit)
+
+
+def test_assemble_features_with_empty_cache(setup):
+    """An installed-but-empty cache (e.g. a worker with no remote
+    accesses) must behave exactly like cache=None."""
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    m_max, edge_max = global_pad_bounds(ws)
+    b = ws.epoch(0).batches[0]
+    cb = collate(b, g.labels, 32, m_max, edge_max)
+    empty = FeatureCache(np.zeros(0, np.int64),
+                         np.zeros((0, g.feat_dim), np.float32))
+    feats = assemble_features(cb, store, empty, EpochMetrics(),
+                              critical_path=False)
+    np.testing.assert_allclose(feats[:b.num_input_nodes],
+                               g.features[b.input_nodes])
+
+
 # ---- accounting identities ------------------------------------------------
+
+
+def test_baseline_dedupe_false_charges_per_occurrence(setup):
+    """dedupe=False models the redundant-RPC regime: per-occurrence
+    charging can never report FEWER remote bytes/RPCs than the deduped
+    (per-batch-unique) default."""
+    g, pg, sampler, ws = setup
+    net = NetworkModel(enabled=False)
+    dd = BaselineRunner(ws, ShardedFeatureStore(pg, 0, net),
+                        batch_size=32, dedupe=True).run().totals()
+    occ = BaselineRunner(ws, ShardedFeatureStore(pg, 0, net),
+                         batch_size=32, dedupe=False).run().totals()
+    assert occ["remote_bytes"] >= dd["remote_bytes"]
+    assert occ["rpc_count"] >= dd["rpc_count"]
+    # tiny graph has repeated neighbors within batches, so strictly more
+    assert occ["remote_bytes"] > dd["remote_bytes"]
+    # per-occurrence multiset covers every unique remote id per batch
+    for e in range(len(ws.epochs)):
+        for b in ws.epoch(e).batches[:2]:
+            uniq = b.input_nodes[pg.owner[b.input_nodes] != 0]
+            occ_ids = occurrence_remote_ids(b, pg.owner, 0)
+            assert np.isin(uniq, occ_ids).all()
 
 def test_rpc_equals_miss_set(setup):
     """Paper invariant: per-epoch RPC count == sum of miss-set sizes."""

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow      # subprocess + 4-device jax init each
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -28,6 +30,18 @@ def test_pull_features_a2a():
 
 def test_pipelined_gnn_epoch_on_mesh():
     assert "pipelined_gnn_epoch OK" in _run("epoch")
+
+
+def test_device_runner_multi_epoch_one_compile_and_parity():
+    """DeviceRapidGNNRunner: 3 epochs, ONE XLA trace, per-epoch miss
+    lanes == host-sim cache_misses, C_sec swap shrinks epoch-1 lanes,
+    baseline parity curves."""
+    assert "device_runner OK" in _run("runner")
+
+
+def test_device_runner_uneven_workers():
+    """Workers with fewer/zero batches pad with masked empty steps."""
+    assert "uneven_workers OK" in _run("uneven")
 
 
 def test_moe_expert_parallel_matches_single_device():

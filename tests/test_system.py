@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow      # end-to-end training loops
+
 from repro.graph import (load_dataset, partition_graph, KHopSampler,
                          random_partition, greedy_partition)
 from repro.core import (build_schedule, ShardedFeatureStore,
