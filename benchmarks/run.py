@@ -37,7 +37,7 @@ def main() -> None:
 
     from benchmarks import (speedup, access_dist, comm_volume, cache_sweep,
                             scaling, memory, energy, convergence,
-                            embedding_cache, device_epoch)
+                            embedding_cache, device_epoch, assemble)
 
     if args.full:
         ds = ("reddit_sim", "ogbn_products_sim", "ogbn_papers_sim")
@@ -74,6 +74,8 @@ def main() -> None:
              lambda rows: rows[-1] if rows else "-")
     _section("device_epoch",
              lambda: device_epoch.run(epochs=epochs + 1),
+             lambda rows: rows[-1] if rows else "-")
+    _section("assemble_collation", assemble.run,
              lambda rows: rows[-1] if rows else "-")
     if not args.skip_roofline:
         from benchmarks import roofline

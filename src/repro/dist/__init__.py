@@ -10,12 +10,14 @@ Importing this package never touches jax device state -- meshes are built
 by ``make_mesh`` on demand, so launchers can set XLA_FLAGS first.
 """
 from repro.dist.mesh import make_mesh, dp_axes
-from repro.dist.feature_a2a import (PullPlan, build_pull_plan, pull_shard,
+from repro.dist.feature_a2a import (PullPlan, build_pull_plan,
+                                    pack_pull_lanes, pull_shard,
                                     pull_features, cache_gather)
 from repro.dist.gnn_step import (CACHE_PAD, DeviceCache, DeviceView,
                                  epoch_k_max, collate_device_epoch,
-                                 stack_caches, make_pipelined_epoch,
-                                 make_ondemand_epoch, empty_caches)
+                                 collate_device_epoch_loop, stack_caches,
+                                 make_pipelined_epoch, make_ondemand_epoch,
+                                 empty_caches, prefetch_stream)
 from repro.dist.runner import (DeviceEpochReport, DeviceRapidGNNRunner,
                                DeviceBaselineRunner, host_miss_matrix,
                                assert_host_parity)
@@ -24,11 +26,12 @@ from repro.dist.shardings import (fit_spec, param_shardings, opt_shardings,
 
 __all__ = [
     "make_mesh", "dp_axes",
-    "PullPlan", "build_pull_plan", "pull_shard", "pull_features",
-    "cache_gather",
+    "PullPlan", "build_pull_plan", "pack_pull_lanes", "pull_shard",
+    "pull_features", "cache_gather",
     "CACHE_PAD", "DeviceCache", "DeviceView", "epoch_k_max",
-    "collate_device_epoch", "stack_caches", "make_pipelined_epoch",
-    "make_ondemand_epoch", "empty_caches",
+    "collate_device_epoch", "collate_device_epoch_loop", "stack_caches",
+    "make_pipelined_epoch", "make_ondemand_epoch", "empty_caches",
+    "prefetch_stream",
     "DeviceEpochReport", "DeviceRapidGNNRunner", "DeviceBaselineRunner",
     "host_miss_matrix", "assert_host_parity",
     "fit_spec", "param_shardings", "opt_shardings", "batch_shardings",

@@ -108,6 +108,88 @@ def build_pull_plan(ids: np.ndarray, pos: np.ndarray, owner: np.ndarray,
                     send_mask=send_mask, counts=counts)
 
 
+def pack_pull_lanes(ids: np.ndarray, pos: np.ndarray, group: np.ndarray,
+                    owner: np.ndarray, num_groups: int, num_parts: int,
+                    k_max: int, assume_unique: bool = False):
+    """Batched ``build_pull_plan``: pack MANY batches' requests into
+    per-(group, owner) lanes in one vectorized pass (DESIGN.md §6.6).
+
+    ids/pos/group/owner are aligned (n,) arrays -- one element per
+    requested (id -> buffer position), ``group`` the flat batch ordinal
+    (e.g. ``step * P + worker``) and ``owner`` the owning worker of each
+    id. Negative ids (padding) are dropped; exact (group, id, pos)
+    duplicates collapse to one lane slot; lanes within a (group, owner)
+    pair are ordered by ascending (id, pos) -- all three semantics
+    identical to calling ``build_pull_plan`` once per group, which the
+    collation parity tests pin. ``assume_unique=True`` skips the dedupe
+    pass -- valid when ids are unique within each group, the sampler's
+    ``input_nodes`` invariant.
+
+    -> (send_ids, send_pos, send_mask) of shape (num_groups, num_parts,
+    k_max) plus counts (num_groups, num_parts). Raises on lane overflow
+    (silent truncation would corrupt training) and out-of-range owners.
+    """
+    ids = np.asarray(ids, dtype=np.int64)       # no copy when already i64
+    pos = np.asarray(pos, dtype=np.int64)
+    group = np.asarray(group, dtype=np.int64)
+    owner = np.asarray(owner, dtype=np.int64)
+    valid = ids >= 0
+    if not valid.all():
+        ids, pos, group, owner = (a[valid] for a in (ids, pos, group,
+                                                     owner))
+    if ids.size and (owner.min() < 0 or owner.max() >= num_parts):
+        raise ValueError(f"owner id out of range: [{owner.min()}, "
+                         f"{owner.max()}] not in [0, {num_parts})")
+    shape = (num_groups, num_parts, k_max)
+    send_ids = np.zeros(shape, np.int32)
+    send_pos = np.zeros(shape, np.int32)
+    send_mask = np.zeros(shape, bool)
+    counts = np.zeros((num_groups, num_parts), np.int32)
+    if not ids.size:
+        return send_ids, send_pos, send_mask, counts
+    gidx = group * num_parts + owner
+    # (group, id, pos) ordering via ONE composite int64 key when the
+    # value ranges allow it -- a single introsort beats the 3-key
+    # lexsort ~3x at epoch scale. Stability is irrelevant: the key is
+    # unique per lane except for EXACT duplicates, which dedupe anyway.
+    span_i = int(ids.max()) + 1
+    span_p = int(pos.max()) + 1
+    if num_groups * num_parts * span_i * span_p < 2 ** 62:
+        key = (gidx * span_i + ids) * span_p + pos
+        order = np.argsort(key)
+        if not assume_unique:
+            k_s = key[order]
+            keep = np.ones(k_s.size, bool)  # drop exact duplicate lanes
+            keep[1:] = k_s[1:] != k_s[:-1]
+            order = order[keep]
+    else:                                   # huge spans: lexsort fallback
+        order = np.lexsort((pos, ids, gidx))
+        if not assume_unique:
+            g0, i0, p0 = gidx[order], ids[order], pos[order]
+            keep = np.ones(g0.size, bool)
+            keep[1:] = ((g0[1:] != g0[:-1]) | (i0[1:] != i0[:-1])
+                        | (p0[1:] != p0[:-1]))
+            order = order[keep]
+    g_s, i_s, p_s = gidx[order], ids[order], pos[order]
+    cnt = np.bincount(g_s, minlength=num_groups * num_parts)
+    if int(cnt.max()) > k_max:
+        over = np.flatnonzero(cnt > k_max)
+        raise ValueError(
+            f"pull plan overflow: (group, owner) pairs "
+            f"{[divmod(int(o), num_parts) for o in over[:8].tolist()]} "
+            f"requested {cnt[over[:8]].tolist()} rows > k_max={k_max}; "
+            f"raise k_max (epoch_k_max gives the exact bound)")
+    start = np.zeros(cnt.size + 1, np.int64)
+    np.cumsum(cnt, out=start[1:])
+    lane = np.arange(g_s.size) - start[g_s]
+    flat = g_s * k_max + lane
+    send_ids.reshape(-1)[flat] = i_s.astype(np.int32)
+    send_pos.reshape(-1)[flat] = p_s.astype(np.int32)
+    send_mask.reshape(-1)[flat] = True
+    counts[:] = cnt.reshape(num_groups, num_parts)
+    return send_ids, send_pos, send_mask, counts
+
+
 def pull_shard(table: jnp.ndarray, send_ids: jnp.ndarray,
                send_pos: jnp.ndarray, send_mask: jnp.ndarray,
                base, m_max: int) -> jnp.ndarray:

@@ -9,17 +9,28 @@ behind the train step's compute -- the device analogue of the host-side
 ``core.prefetch.Prefetcher`` thread, with the bounded queue replaced by a
 1-step software pipeline carried through the scan.
 
+Per-step feature assembly is the SINGLE-PASS fused path
+(``kernels/assemble``): local-shard gather, C_s binary-search merge and
+pulled-residual overlay resolved per row with one output materialization
+(DESIGN.md §3), shared by both epoch programs so rapid-vs-baseline
+comparisons assemble features identically. The legacy three-stage chain
+(``cache_lookup`` then local overlay) survives as the ``"staged"``
+backend / interpret-mode oracle.
+
 Host-side companions (all numpy, computed offline from the deterministic
 schedule): ``DeviceView`` relabels the partitioned graph into contiguous
 per-worker slot ranges so ownership is ``id // n_per``; ``epoch_k_max``
 computes the exact static lane bound; ``collate_device_epoch`` packs a
-whole epoch into (S, P, ...) arrays; ``stack_caches`` stacks the
-per-worker hot sets C_s.
+whole epoch into (S, P, ...) arrays in one VECTORIZED pass (single
+``g2d`` gather, one cache ``searchsorted``, batched lane packing --
+DESIGN.md §6.6; the per-(step, worker) loop survives as
+``collate_device_epoch_loop``, the parity/bench reference);
+``stack_caches`` stacks the per-worker hot sets C_s.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -29,9 +40,11 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.schedule import EpochSchedule, collate
 from repro.graph.partition import PartitionedGraph
-from repro.kernels.cache_lookup.ops import cache_lookup, to_device_ids
+from repro.kernels.assemble.ops import assemble_features
+from repro.kernels.cache_lookup.ops import to_device_ids
 from repro.models.gnn import GNNConfig, loss_fn
-from repro.dist.feature_a2a import build_pull_plan, pull_shard
+from repro.dist.feature_a2a import (build_pull_plan, pack_pull_lanes,
+                                    pull_shard)
 
 #: int64 cache padding; survives the int32 canonicalisation cast exactly
 #: and matches the ``cache_lookup`` device sentinel.
@@ -100,23 +113,147 @@ def _batch_miss(es_batch, cache: DeviceCache, dv: DeviceView, worker: int):
     return dev, miss
 
 
+def _epoch_flat(es_list: Sequence[EpochSchedule], dv: DeviceView
+                ) -> Optional[Dict[str, np.ndarray]]:
+    """Flatten an epoch's every (worker, batch) input-node list into
+    aligned per-element arrays with ONE ``g2d`` gather (the vectorized
+    staging spine, DESIGN.md §6.6).
+
+    -> dict: per-batch ``step``/``worker``/``m_counts``/``starts``
+    (element offsets) plus the per-element ``dev`` device ids; None for
+    an epoch with no batches at all. Per-element batch/column
+    coordinates are NOT materialized here -- ``_miss_coords`` derives
+    them lazily for just the miss subset.
+    """
+    recs = [(w, i, b) for w, es in enumerate(es_list)
+            for i, b in enumerate(es.batches)]
+    if not recs:
+        return None
+    n = len(recs)
+    step = np.fromiter((i for _, i, _ in recs), np.int64, n)
+    worker = np.fromiter((w for w, _, _ in recs), np.int64, n)
+    m_counts = np.fromiter((b.num_input_nodes for _, _, b in recs),
+                           np.int64, n)
+    dev = dv.g2d[np.concatenate([b.input_nodes for _, _, b in recs])]
+    starts = np.zeros(n + 1, np.int64)
+    np.cumsum(m_counts, out=starts[1:])
+    return {"recs": recs, "step": step, "worker": worker,
+            "m_counts": m_counts, "dev": dev, "starts": starts}
+
+
+def _miss_coords(flat: Dict[str, np.ndarray], miss: np.ndarray):
+    """(batch ordinal, buffer row) of each missed element, derived from
+    the element offsets -- a binary search over the (n_batches,) starts
+    vector on just the miss subset instead of materializing full
+    per-element repeat/arange coordinate arrays."""
+    idx = np.flatnonzero(miss)
+    eb = np.searchsorted(flat["starts"], idx, side="right") - 1
+    return eb, idx - flat["starts"][eb]
+
+
+#: device-id spaces up to this many slots use the O(1) stamp-table
+#: membership test (int32 stamp array = 4 bytes/slot host scratch);
+#: larger spaces fall back to per-worker binary search
+STAMP_TABLE_MAX_SLOTS = 1 << 26
+
+
+def _classify_misses(flat: Dict[str, np.ndarray],
+                     caches: Sequence[DeviceCache], dv: DeviceView):
+    """Residual-miss classification for a whole epoch in one vectorized
+    pass per worker (replacing the S x P per-batch ``np.isin`` calls,
+    each of which re-sorted the hot set).
+
+    The flattened element stream is worker-major, so each worker's
+    elements are one contiguous slice. Membership in that worker's hot
+    set is an O(1) probe of a slot-indexed STAMP table (``stamp[id] ==
+    w``; workers stamp in ascending order, so later overwrites never
+    corrupt earlier queries and the table needs no clearing) -- for id
+    spaces too large for the 4 B/slot scratch it degrades to one
+    vectorized binary search per worker against its cache-resident
+    (n_hot,) key vector. Remoteness is two compares against the
+    worker's slot range, not a division.
+
+    -> (miss mask aligned with ``flat['dev']``, owners of just the
+    missed elements).
+    """
+    dev = flat["dev"]
+    miss = np.zeros(dev.shape, bool)
+    wk, mc = flat["worker"], flat["m_counts"]
+    n_slots = dv.num_parts * dv.n_per
+    stamp = (np.full(n_slots, -1, np.int32)
+             if n_slots <= STAMP_TABLE_MAX_SLOTS else None)
+    lo = 0
+    for w, cache in enumerate(caches):
+        span = int(mc[wk == w].sum())
+        sl = slice(lo, lo + span)
+        lo += span
+        if span == 0:
+            continue
+        d = dev[sl]
+        base = w * dv.n_per
+        rem = (d < base) | (d >= base + dv.n_per)
+        if cache.ids.shape[0] == 0 or not rem.any():
+            miss[sl] = rem
+            continue
+        q = d[rem]
+        m = rem.copy()
+        if stamp is not None:
+            stamp[cache.ids] = w
+            m[rem] = stamp[q] != w
+        else:
+            pos = np.minimum(np.searchsorted(cache.ids, q),
+                             cache.ids.shape[0] - 1)
+            m[rem] = cache.ids[pos] != q
+        miss[sl] = m
+    return miss, dev[miss] // dv.n_per
+
+
 def epoch_k_max(es_list: Sequence[EpochSchedule],
                 caches: Sequence[DeviceCache], dv: DeviceView) -> int:
-    """Exact static per-owner lane bound over all (worker, step) pairs.
+    """Exact static per-owner lane bound over all (worker, step) pairs,
+    computed in one vectorized pass over the whole epoch (bincount over
+    (batch, owner) group keys -- no per-batch loop).
 
     Pad bounds (m_max / edge maxima) are NOT recomputed here -- callers
     precompute them once via ``WorkerSchedule.pad_bounds()`` (the
     multi-epoch runner maxes this over every epoch's caches so all
     epochs share one compiled program). Workers with fewer batches
     simply contribute fewer (worker, step) pairs."""
-    k = 1
-    for w, es in enumerate(es_list):
-        for b in es.batches:
-            dev, miss = _batch_miss(b, caches[w], dv, w)
-            if miss.any():
-                owners = dev[miss] // dv.n_per
-                k = max(k, int(np.bincount(owners).max()))
-    return k
+    flat = _epoch_flat(es_list, dv)
+    if flat is None:
+        return 1
+    miss, owner_miss = _classify_misses(flat, caches, dv)
+    if owner_miss.size == 0:
+        return 1
+    P_ = len(es_list)
+    eb, _ = _miss_coords(flat, miss)
+    return max(1, int(np.bincount(eb * P_ + owner_miss).max()))
+
+
+def _alloc_epoch(P_: int, S: int, batch_size: int, m_max: int,
+                 edge_max: Sequence[int], k_max: int
+                 ) -> Dict[str, np.ndarray]:
+    """Empty (S, P, ...) device-layout epoch: every step fully masked."""
+    return {
+        "input_nodes": np.full((S, P_, m_max), -1, np.int64),
+        "labels": np.zeros((S, P_, batch_size), np.int32),
+        "seed_mask": np.zeros((S, P_, batch_size), bool),
+        "send_ids": np.zeros((S, P_, P_, k_max), np.int32),
+        "send_pos": np.zeros((S, P_, P_, k_max), np.int32),
+        "send_mask": np.zeros((S, P_, P_, k_max), bool),
+        "edge_src": [np.zeros((S, P_, e), np.int32) for e in edge_max],
+        "edge_dst": [np.zeros((S, P_, e), np.int32) for e in edge_max],
+        "edge_mask": [np.zeros((S, P_, e), bool) for e in edge_max],
+    }
+
+
+def _check_num_steps(es_list: Sequence[EpochSchedule], S: int) -> None:
+    over = [w for w, es in enumerate(es_list) if len(es.batches) > S]
+    if over:
+        raise ValueError(
+            f"workers {over} have more batches than num_steps={S}; "
+            f"pass num_steps >= max worker batch count "
+            f"(dropping steps would corrupt miss accounting)")
 
 
 def collate_device_epoch(es_list: Sequence[EpochSchedule],
@@ -124,11 +261,26 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
                          labels: np.ndarray, batch_size: int, m_max: int,
                          edge_max: Sequence[int], k_max: int,
                          num_steps: int) -> Dict[str, np.ndarray]:
-    """Pack an epoch into the (S, P, ...) device layout.
+    """Pack an epoch into the (S, P, ...) device layout -- VECTORIZED.
 
     Per (step, worker): the padded collated batch (ids remapped to
     device space, -1 padded) plus the residual-miss PullPlan lanes.
-    Layout matches launch/dryrun_gnn.specs exactly.
+    Layout matches launch/dryrun_gnn.specs exactly, batch-for-batch
+    identical to ``collate_device_epoch_loop`` (the per-(step, worker)
+    reference this path is parity-tested against).
+
+    The per-element work stages in a handful of whole-epoch numpy ops
+    instead of S x P small ones (DESIGN.md §6.6): one ``g2d`` gather
+    over every input node, one label gather over every seed, one
+    stamp-table membership pass per worker for miss classification
+    (``_classify_misses``, replacing S x P ``np.isin`` re-sorts), and
+    one sort-based lane packing (``pack_pull_lanes``) replacing S x P
+    ``build_pull_plan`` calls. Only the ragged padded-array fills
+    (edges, input ids) stay per-batch -- they are contiguous slice
+    memcpys, which beat any index-based scatter -- writing straight
+    into the output with no intermediate per-batch ``collate`` pads.
+    This is what keeps the host's double-buffer staging ahead of the
+    device at 256+ workers.
 
     ``m_max``/``edge_max``/``k_max``/``num_steps`` are precomputed
     bounds -- the multi-epoch runner passes GLOBAL (all-epoch, all-
@@ -142,24 +294,70 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     """
     P_ = len(es_list)
     S = num_steps
+    _check_num_steps(es_list, S)
+    out = _alloc_epoch(P_, S, batch_size, m_max, edge_max, k_max)
+    flat = _epoch_flat(es_list, dv)
+    if flat is None:
+        return out
+    recs = flat["recs"]
+    n = len(recs)
+    row = flat["step"] * P_ + flat["worker"]    # batch -> flat (step, w)
+    dev, starts = flat["dev"], flat["starts"]
+
+    # seeds/labels: ONE label gather over every seed in the epoch
+    seed_counts = np.fromiter((b.seeds.shape[0] for _, _, b in recs),
+                              np.int64, n)
+    lab_all = labels[np.concatenate([b.seeds for _, _, b in recs])]
+    sstart = np.zeros(n + 1, np.int64)
+    np.cumsum(seed_counts, out=sstart[1:])
+
+    # ragged padded fills: contiguous slice memcpys straight into the
+    # output (no per-batch collate() intermediates)
+    inp = out["input_nodes"]
+    lab = out["labels"]
+    smk = out["seed_mask"]
+    m_counts = flat["m_counts"]
+    for t, (w, i, b) in enumerate(recs):
+        inp[i, w, :m_counts[t]] = dev[starts[t]:starts[t + 1]]
+        nb = seed_counts[t]
+        lab[i, w, :nb] = lab_all[sstart[t]:sstart[t + 1]]
+        smk[i, w, :nb] = True
+        for l in range(len(edge_max)):
+            blk = b.blocks[l]
+            E = blk.edge_src.shape[0]
+            out["edge_src"][l][i, w, :E] = blk.edge_src
+            out["edge_dst"][l][i, w, :E] = blk.edge_dst
+            out["edge_mask"][l][i, w, :E] = blk.edge_mask
+
+    # residual-miss pull lanes: one classification + one batched packing
+    miss, owner_miss = _classify_misses(flat, caches, dv)
+    eb, col = _miss_coords(flat, miss)
+    # assume_unique: the sampler dedupes input_nodes per batch, so no
+    # (group, id, pos) duplicates can exist
+    sids, spos, smask, _ = pack_pull_lanes(
+        dev[miss], col, row[eb], owner_miss, S * P_, P_, k_max,
+        assume_unique=True)
+    out["send_ids"] = sids.reshape(S, P_, P_, k_max)
+    out["send_pos"] = spos.reshape(S, P_, P_, k_max)
+    out["send_mask"] = smask.reshape(S, P_, P_, k_max)
+    return out
+
+
+def collate_device_epoch_loop(es_list: Sequence[EpochSchedule],
+                              caches: Sequence[DeviceCache],
+                              dv: DeviceView, labels: np.ndarray,
+                              batch_size: int, m_max: int,
+                              edge_max: Sequence[int], k_max: int,
+                              num_steps: int) -> Dict[str, np.ndarray]:
+    """Per-(step, worker) reference collation: one ``collate`` +
+    ``build_pull_plan`` call per batch. Kept as the oracle the
+    vectorized ``collate_device_epoch`` is parity-tested and benchmarked
+    against (``benchmarks/assemble.py``)."""
+    P_ = len(es_list)
+    S = num_steps
     L = len(edge_max)
-    over = [w for w, es in enumerate(es_list) if len(es.batches) > S]
-    if over:
-        raise ValueError(
-            f"workers {over} have more batches than num_steps={S}; "
-            f"pass num_steps >= max worker batch count "
-            f"(dropping steps would corrupt miss accounting)")
-    out = {
-        "input_nodes": np.full((S, P_, m_max), -1, np.int64),
-        "labels": np.zeros((S, P_, batch_size), np.int32),
-        "seed_mask": np.zeros((S, P_, batch_size), bool),
-        "send_ids": np.zeros((S, P_, P_, k_max), np.int32),
-        "send_pos": np.zeros((S, P_, P_, k_max), np.int32),
-        "send_mask": np.zeros((S, P_, P_, k_max), bool),
-        "edge_src": [np.zeros((S, P_, e), np.int32) for e in edge_max],
-        "edge_dst": [np.zeros((S, P_, e), np.int32) for e in edge_max],
-        "edge_mask": [np.zeros((S, P_, e), bool) for e in edge_max],
-    }
+    _check_num_steps(es_list, S)
+    out = _alloc_epoch(P_, S, batch_size, m_max, edge_max, k_max)
     owner_d = dv.owner_d
     for w, es in enumerate(es_list):
         for i in range(len(es.batches)):
@@ -209,16 +407,27 @@ def stack_caches(caches: Sequence[DeviceCache], dv: DeviceView,
     return cids, cfeats
 
 
-def _local_merge(tbl, base, q, fallback):
-    """Overlay this worker's shard rows onto ``fallback`` where the
-    queried device id is locally owned (slot in [0, n_per)); padding ids
-    (-1) are never local. Shared by both epoch programs so the
-    rapid-vs-baseline comparison assembles features identically."""
-    n_per = tbl.shape[0]
-    slot = q - base
-    local = (slot >= 0) & (slot < n_per)
-    rows = tbl[jnp.clip(slot, 0, n_per - 1)]
-    return jnp.where(local[:, None], rows, fallback)
+def prefetch_stream(send: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Roll the per-step pull plans one step forward (step i's scan body
+    pulls step i+1's misses) and fully MASK the final element: the roll
+    wraps step 0's plan to the last scan step, whose pull is discarded,
+    so shipping its real lanes would be a wasted fetch. The masked
+    element keeps the collective shape-static (the all_to_all still
+    runs) but requests only zero lanes -- fetch accounting is unchanged
+    because lane counts come from the un-rolled host arrays.
+
+    send: dict of (S, ...) arrays with keys send_ids/send_pos/send_mask.
+    """
+    S = send["send_mask"].shape[0]
+    rolled = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), send)
+    live = jnp.arange(S) < S - 1
+    bshape = (S,) + (1,) * (rolled["send_mask"].ndim - 1)
+    live = live.reshape(bshape)
+    return {
+        "send_ids": jnp.where(live, rolled["send_ids"], 0),
+        "send_pos": jnp.where(live, rolled["send_pos"], 0),
+        "send_mask": rolled["send_mask"] & live,
+    }
 
 
 def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x):
@@ -236,14 +445,18 @@ def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x):
     return p2, o2, loss, acc
 
 
-def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
+def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
+                         assemble_backend: str = "auto",
+                         assemble_interpret: bool = False):
     """-> epoch_fn(params, opt_state, table, offsets, cache_ids,
     cache_feats, batches) running S pipelined steps on the mesh.
 
     Per scan step (DESIGN.md §6.3): pull step i+1's residual misses
     (carried to the next iteration) while training on step i's features,
-    assembled local-first -> cache C_s -> pulled residuals; grads are
-    pmean'd over ``data`` so params stay replicated. Returns
+    assembled by the fused single-pass kernel (local shard > cache C_s >
+    pulled residuals resolved per row, one output materialization --
+    ``kernels/assemble``, backend selected by ``assemble_backend``);
+    grads are pmean'd over ``data`` so params stay replicated. Returns
     (params, opt_state, losses (S,), accs (S,)).
     """
 
@@ -262,13 +475,15 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
                                   send["send_mask"], base, m_max)
 
             def assemble(pulled, ids):
-                q = to_device_ids(ids)
-                merged, _ = cache_lookup(cids32, cfe, q, pulled)
-                return _local_merge(tbl, base, q, merged)
+                return assemble_features(
+                    tbl, base, cids32, cfe, to_device_ids(ids), pulled,
+                    backend=assemble_backend,
+                    interpret=assemble_interpret)
 
             send = {k: bt[k] for k in ("send_ids", "send_pos", "send_mask")}
-            # prefetch stream: step i's body pulls step i+1's misses (the
-            # final roll wraps to step 0 -- one wasted pull, discarded)
+            # prefetch stream: step i's body pulls step i+1's misses; the
+            # wrapped final element is fully masked (its pull would be
+            # discarded), so no real lanes ride the wasted wrap fetch
             xs = {
                 "input_nodes": bt["input_nodes"],
                 "labels": bt["labels"],
@@ -276,8 +491,7 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
                 "edge_src": bt["edge_src"],
                 "edge_dst": bt["edge_dst"],
                 "edge_mask": bt["edge_mask"],
-                "next_send": jax.tree.map(
-                    lambda a: jnp.roll(a, -1, axis=0), send),
+                "next_send": prefetch_stream(send),
             }
             pulled0 = pull(jax.tree.map(lambda a: a[0], send))
 
@@ -304,18 +518,22 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
     return epoch_fn
 
 
-def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
+def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
+                        assemble_backend: str = "auto",
+                        assemble_interpret: bool = False):
     """-> epoch_fn(params, opt_state, table, offsets, batches): the
     DGL-style on-demand baseline as a NON-overlapped scan.
 
-    Same mesh, same pull-plan wire format, same train step as
-    ``make_pipelined_epoch`` -- but no cache C_s and no software
-    pipeline: step i's all_to_all pull feeds step i's own features, so
-    the collective sits on the trainer's critical path every step. This
-    is the device analogue of ``core.runtime.BaselineRunner``, making
-    device rapid-vs-baseline step time directly measurable
-    (DESIGN.md §6.5). Collate its batches with EMPTY caches so every
-    remote id rides the pull lanes.
+    Same mesh, same pull-plan wire format, same train step and the SAME
+    fused assembly path as ``make_pipelined_epoch`` (cache-less:
+    ``assemble_features`` with no C_s, so local shard > pulled) -- the
+    rapid-vs-baseline comparison assembles features identically. But no
+    software pipeline: step i's all_to_all pull feeds step i's own
+    features, so the collective sits on the trainer's critical path
+    every step. This is the device analogue of
+    ``core.runtime.BaselineRunner``, making device rapid-vs-baseline
+    step time directly measurable (DESIGN.md §6.5). Collate its batches
+    with EMPTY caches so every remote id rides the pull lanes.
     """
 
     def epoch_fn(params, opt_state, table, offsets, batches):
@@ -331,8 +549,11 @@ def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int):
                 # depends on it, so nothing overlaps (on-demand fetch)
                 pulled = pull_shard(tbl, x["send_ids"], x["send_pos"],
                                     x["send_mask"], base, m_max)
-                q = to_device_ids(x["input_nodes"])
-                feats = _local_merge(tbl, base, q, pulled)
+                feats = assemble_features(
+                    tbl, base, None, None,
+                    to_device_ids(x["input_nodes"]), pulled,
+                    backend=assemble_backend,
+                    interpret=assemble_interpret)
                 p2, o2, loss, acc = _pmean_train_step(
                     cfg, opt, params, opt_state, feats, x)
                 return (p2, o2), (loss, acc)

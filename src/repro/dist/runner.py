@@ -3,10 +3,13 @@
 ``DeviceRapidGNNRunner`` drives N epochs through ``make_pipelined_epoch``
 with the paper's double-buffer protocol (DESIGN.md §6.5): while epoch e
 trains on device against C_s, the host stages epoch e+1's C_sec
-(``remap_cache`` + ``stack_caches``) and pull plans -- jax dispatch is
-asynchronous, so the staging genuinely overlaps the device epoch, the
-device analogue of ``core.prefetch.SecondaryCacheBuilder`` -- and the
-staged buffers swap in at the epoch boundary (Alg. 1 l.18).
+(``remap_cache`` + ``stack_caches``) and pull plans through the
+VECTORIZED ``collate_device_epoch`` (DESIGN.md §6.6; whole-epoch numpy,
+no per-(step, worker) loop, so staging keeps up with the device at
+256+ workers) -- jax dispatch is asynchronous, so the staging genuinely
+overlaps the device epoch, the device analogue of
+``core.prefetch.SecondaryCacheBuilder`` -- and the staged buffers swap
+in at the epoch boundary (Alg. 1 l.18).
 
 Every epoch is collated to GLOBAL static bounds: ``WorkerSchedule.
 pad_bounds()`` merged across workers, one ``k_max`` maxed over every
@@ -69,7 +72,9 @@ class _DeviceRunnerBase:
 
     def __init__(self, schedules: Sequence[WorkerSchedule], dv: DeviceView,
                  cfg: GNNConfig, opt, mesh, batch_size: int,
-                 labels: np.ndarray, seed: int = 0):
+                 labels: np.ndarray, seed: int = 0,
+                 assemble_backend: str = "auto"):
+        self.assemble_backend = assemble_backend
         self.schedules = list(schedules)
         self.P = len(self.schedules)
         if mesh.devices.size != self.P:
@@ -203,7 +208,8 @@ class DeviceRapidGNNRunner(_DeviceRunnerBase):
 
     def _make_epoch_fn(self):
         return make_pipelined_epoch(self.cfg, self.opt, self.mesh,
-                                    self.m_max)
+                                    self.m_max,
+                                    assemble_backend=self.assemble_backend)
 
     def _run_epoch(self, params, opt_state, table, offsets, staged):
         return self._fn(params, opt_state, table, offsets, staged["cids"],
@@ -217,7 +223,8 @@ class DeviceBaselineRunner(_DeviceRunnerBase):
 
     def _make_epoch_fn(self):
         return make_ondemand_epoch(self.cfg, self.opt, self.mesh,
-                                   self.m_max)
+                                   self.m_max,
+                                   assemble_backend=self.assemble_backend)
 
     def _run_epoch(self, params, opt_state, table, offsets, staged):
         return self._fn(params, opt_state, table, offsets,

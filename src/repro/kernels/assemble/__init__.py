@@ -1,0 +1,5 @@
+from repro.kernels.assemble.ops import (assemble_features, local_merge,
+                                        resolve_backend, BACKENDS)
+
+__all__ = ["assemble_features", "local_merge", "resolve_backend",
+           "BACKENDS"]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused single-pass feature assembly (DESIGN.md §3).
+
+Replaces the legacy three-stage assembly chain of the device epoch
+(``pull_shard`` scatter -> ``cache_lookup.search`` -> ``merge_gather`` ->
+jnp local-shard overlay) with ONE kernel pass per ``(m, d)`` tile.
+
+Two phases, one output materialization:
+
+  1. *classify* (metadata, (m,)-shaped): the tiled VPU mask-sum binary
+     search over the sorted hot-set ids (``cache_lookup.search``, shared
+     -- it is already dense vector work) plus the arithmetic ownership
+     test ``base <= q < base + n_per``, folded into three scalar-prefetch
+     vectors: per-row source selector (pulled / cache / local) and the
+     two gather indices (cache row, shard slot).
+  2. *select* -- a single ``pl.pallas_call`` over grid ``(m, d/dt)``
+     whose BlockSpec index maps gather the cache row, the local-shard
+     row and the pulled row for each query, and whose body writes the
+     winning row ONCE.  The legacy chain materialized three full
+     ``(m, d)`` buffers (merge_gather output, the local-shard gather,
+     the final where); this path writes exactly one.
+
+Feature dims not divisible by the tile pad internally (zeros, sliced off
+the output) -- arbitrary ``m`` / ``n_hot`` / ``d`` are accepted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cache_lookup.cache_lookup import SENTINEL, pad_to, search
+
+#: per-row source selector values (scalar-prefetched into the kernel)
+SRC_PULLED, SRC_CACHE, SRC_LOCAL = 0, 1, 2
+
+DEFAULT_D_TILE = 128
+
+
+def classify(cache_ids: jax.Array, query: jax.Array, base, n_per: int,
+             interpret: bool = False):
+    """-> (src (m,) int32 selector, cpos (m,) cache row, lslot (m,) shard
+    slot); gather indices are clamped in-range so padding rows stay
+    addressable (their selector never picks the clamped source)."""
+    n_hot = cache_ids.shape[0]
+    pos, hit = search(cache_ids, query, interpret=interpret)
+    slot = query - base
+    local = (slot >= 0) & (slot < n_per)
+    src = jnp.where(local, SRC_LOCAL,
+                    jnp.where(hit, SRC_CACHE, SRC_PULLED)).astype(jnp.int32)
+    cpos = jnp.minimum(pos, max(n_hot - 1, 0)).astype(jnp.int32)
+    lslot = jnp.clip(slot, 0, n_per - 1).astype(jnp.int32)
+    return src, cpos, lslot
+
+
+def _select_kernel(src, cpos, lslot, cache_ref, table_ref, pulled_ref,
+                   o_ref):
+    i = pl.program_id(0)
+    s = src[i]
+    row = jnp.where(
+        s == SRC_LOCAL, table_ref[...].astype(o_ref.dtype),
+        jnp.where(s == SRC_CACHE, cache_ref[...].astype(o_ref.dtype),
+                  pulled_ref[...]))
+    o_ref[...] = row
+
+
+def assemble(table: jax.Array, base, cache_ids: jax.Array,
+             cache_feats: jax.Array, query: jax.Array, pulled: jax.Array,
+             d_tile: int = DEFAULT_D_TILE,
+             interpret: bool = False) -> jax.Array:
+    """Fused assembly: table (n_per, d); base scalar; cache_ids (n_hot,)
+    sorted int32; cache_feats (n_hot, d); query (m,) int32; pulled (m, d)
+    -> (m, d)."""
+    n_per = table.shape[0]
+    m, d0 = pulled.shape
+    if cache_feats.shape[0] == 0:
+        # sentinel row: the selector can never pick it (no hits), but the
+        # BlockSpec index map needs an addressable row 0
+        cache_ids = jnp.full((1,), SENTINEL, jnp.int32)
+        cache_feats = jnp.zeros((1, d0), cache_feats.dtype)
+    src, cpos, lslot = classify(cache_ids, query, base, n_per,
+                                interpret=interpret)
+
+    dt = min(d0, d_tile)
+    if d0 % dt:
+        cache_feats = pad_to(cache_feats, dt, 1, 0)
+        table = pad_to(table, dt, 1, 0)
+        pulled = pad_to(pulled, dt, 1, 0)
+    d = pulled.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # src, cpos, lslot
+        grid=(m, d // dt),
+        in_specs=[
+            pl.BlockSpec((1, dt), lambda i, k, s, p, l: (p[i], k)),
+            pl.BlockSpec((1, dt), lambda i, k, s, p, l: (l[i], k)),
+            pl.BlockSpec((1, dt), lambda i, k, s, p, l: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((1, dt), lambda i, k, s, p, l: (i, k)),
+    )
+    out = pl.pallas_call(
+        _select_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), pulled.dtype),
+        interpret=interpret,
+    )(src, cpos, lslot, cache_feats, table, pulled)
+    return out[:, :d0]

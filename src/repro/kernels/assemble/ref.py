@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused single-pass feature assembly.
+
+Semantics of one assembled row (priority order, identical to the legacy
+three-stage chain ``pull_shard -> cache_lookup -> local merge``):
+
+  1. LOCAL   -- the queried device id falls in this worker's shard
+                (``base <= q < base + n_per``): serve ``table[q - base]``.
+  2. CACHED  -- the id binary-searches into the sorted hot set C_s:
+                serve ``cache_feats[pos]``.
+  3. PULLED  -- otherwise keep the pre-scattered all_to_all residual row
+                (``pulled[i]``; zeros for padding ids).
+
+Padding ids (-1) are never local (slot < 0) and never hit (cache ids are
+non-negative or the INT32_MAX sentinel), so they keep their zero pulled
+row -- exactly the legacy behaviour.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assemble_ref(table: jnp.ndarray, base, cache_ids: jnp.ndarray,
+                 cache_feats: jnp.ndarray, query: jnp.ndarray,
+                 pulled: jnp.ndarray) -> jnp.ndarray:
+    """table (n_per, d); base scalar first slot; cache_ids (n_hot,)
+    sorted int32; cache_feats (n_hot, d); query (m,) int32 (-1 padded);
+    pulled (m, d) -> (m, d) assembled features."""
+    n_per = table.shape[0]
+    slot = query - base
+    local = (slot >= 0) & (slot < n_per)
+    rows_local = table[jnp.clip(slot, 0, n_per - 1)]
+    n_hot = cache_ids.shape[0]
+    if n_hot == 0:
+        return jnp.where(local[:, None], rows_local.astype(pulled.dtype),
+                         pulled)
+    pos = jnp.searchsorted(cache_ids, query)
+    pos_c = jnp.minimum(pos, n_hot - 1)
+    hit = ((cache_ids[pos_c] == query) & (query >= 0)
+           & (query != 2 ** 31 - 1))   # sentinel queries never hit
+    rows_cache = cache_feats[pos_c]
+    return jnp.where(
+        local[:, None], rows_local.astype(pulled.dtype),
+        jnp.where(hit[:, None], rows_cache.astype(pulled.dtype), pulled))

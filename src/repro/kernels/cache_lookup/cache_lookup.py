@@ -26,6 +26,25 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_TQ = 256
 DEFAULT_TC = 1024
 
+#: int32 cache sentinel: compares >= every real device id, so padding the
+#: cache-id vector with it never perturbs ``pos = #{ids < q}`` or ``hit``.
+SENTINEL = 2 ** 31 - 1
+
+
+def pad_to(x: jax.Array, mult: int, axis: int, value) -> jax.Array:
+    """Pad ``x`` along ``axis`` up to the next multiple of ``mult`` with a
+    constant. No-op (and no copy) when already aligned; this is how the
+    kernels accept arbitrary m / n_hot / d instead of asserting
+    divisibility (an awkward batch size used to crash the compiled
+    epoch)."""
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, rem)
+    return jnp.pad(x, width, constant_values=value)
+
 
 def _search_kernel(q_ref, ids_ref, pos_ref, hit_ref):
     j = pl.program_id(1)
@@ -46,13 +65,27 @@ def _search_kernel(q_ref, ids_ref, pos_ref, hit_ref):
 def search(cache_ids: jax.Array, query: jax.Array, tq: int = DEFAULT_TQ,
            tc: int = DEFAULT_TC, interpret: bool = False
            ) -> Tuple[jax.Array, jax.Array]:
-    """cache_ids (n_hot,) sorted int32; query (m,) int32 -> (pos, hit)."""
+    """cache_ids (n_hot,) sorted int32; query (m,) int32 -> (pos, hit).
+
+    Arbitrary ``m`` / ``n_hot`` (including 0-sized caches) are handled by
+    internal padding: queries pad with -1 (matches nothing, pos rows
+    sliced off), cache ids pad with the INT32_MAX sentinel (sorts after
+    every real id, so no real query's rank or hit changes). Sentinel
+    queries NEVER hit -- they would otherwise match the padded cache
+    tail -- matching the jnp oracle's contract.
+    """
     m = query.shape[0]
-    n_hot = cache_ids.shape[0]
+    if m == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.bool_))
+    if cache_ids.shape[0] == 0:
+        cache_ids = jnp.full((1,), SENTINEL, jnp.int32)
     tq = min(tq, m)
-    tc = min(tc, n_hot)
-    assert m % tq == 0 and n_hot % tc == 0, (m, tq, n_hot, tc)
-    grid = (m // tq, n_hot // tc)
+    tc = min(tc, cache_ids.shape[0])
+    query = pad_to(query, tq, 0, -1)
+    cache_ids = pad_to(cache_ids, tc, 0, SENTINEL)
+    mp = query.shape[0]
+    n_hot = cache_ids.shape[0]
+    grid = (mp // tq, n_hot // tc)
     pos, hit = pl.pallas_call(
         _search_kernel,
         grid=grid,
@@ -60,11 +93,11 @@ def search(cache_ids: jax.Array, query: jax.Array, tq: int = DEFAULT_TQ,
                   pl.BlockSpec((tc,), lambda i, j: (j,))],
         out_specs=[pl.BlockSpec((tq,), lambda i, j: (i,)),
                    pl.BlockSpec((tq,), lambda i, j: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
-                   jax.ShapeDtypeStruct((m,), jnp.bool_)],
+        out_shape=[jax.ShapeDtypeStruct((mp,), jnp.int32),
+                   jax.ShapeDtypeStruct((mp,), jnp.bool_)],
         interpret=interpret,
     )(query, cache_ids)
-    return pos, hit
+    return pos[:m], hit[:m] & (query[:m] != SENTINEL)
 
 
 def _merge_kernel(pos, hit, feats_ref, base_ref, o_ref):
@@ -78,10 +111,19 @@ def _merge_kernel(pos, hit, feats_ref, base_ref, o_ref):
 def merge_gather(cache_feats: jax.Array, base: jax.Array, pos: jax.Array,
                  hit: jax.Array, d_tile: int = 128,
                  interpret: bool = False) -> jax.Array:
-    """base (m, d) pre-filled buffer; cached rows win where hit."""
-    m, d = base.shape
-    dt = min(d, d_tile)
-    assert d % dt == 0
+    """base (m, d) pre-filled buffer; cached rows win where hit.
+
+    A feature dim not divisible by ``d_tile`` pads internally (both
+    operands, sliced off the output) instead of asserting.
+    """
+    m, d0 = base.shape
+    if cache_feats.shape[0] == 0:       # empty cache: nothing can hit
+        return base
+    dt = min(d0, d_tile)
+    if d0 % dt:
+        cache_feats = pad_to(cache_feats, dt, 1, 0)
+        base = pad_to(base, dt, 1, 0)
+    d = base.shape[1]
     n_hot = cache_feats.shape[0]
     pos_c = jnp.minimum(pos, n_hot - 1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -93,12 +135,13 @@ def merge_gather(cache_feats: jax.Array, base: jax.Array, pos: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, dt), lambda i, k, p, h: (i, k)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _merge_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, d), base.dtype),
         interpret=interpret,
     )(pos_c, hit, cache_feats, base)
+    return out[:, :d0]
 
 
 def cache_lookup(cache_ids: jax.Array, cache_feats: jax.Array,

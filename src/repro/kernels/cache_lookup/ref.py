@@ -11,11 +11,15 @@ def cache_lookup_ref(cache_ids: jnp.ndarray, cache_feats: jnp.ndarray,
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """cache_ids (n_hot,) sorted (padded with a huge sentinel);
     cache_feats (n_hot, d); query (m,); base (m, d) pre-filled buffer.
-    -> (merged (m, d), hit (m,) bool)."""
+    -> (merged (m, d), hit (m,) bool). Padding (-1) and sentinel
+    queries never hit."""
     n_hot = cache_ids.shape[0]
+    if n_hot == 0:                      # empty cache: nothing can hit
+        return base, jnp.zeros(query.shape, jnp.bool_)
     pos = jnp.searchsorted(cache_ids, query)
     pos_c = jnp.minimum(pos, max(n_hot - 1, 0))
-    hit = (cache_ids[pos_c] == query) & (query >= 0)
+    hit = ((cache_ids[pos_c] == query) & (query >= 0)
+           & (query != 2 ** 31 - 1))
     vals = cache_feats[pos_c]
     merged = jnp.where(hit[:, None], vals.astype(base.dtype), base)
     return merged, hit

@@ -47,10 +47,19 @@ def _kernel(edge_src, edge_mask, cnt, h_ref, o_ref, *, fanout):
 def gather_agg(h: jax.Array, edge_src: jax.Array, edge_mask: jax.Array,
                nd: int, fanout: int, d_tile: int = DEFAULT_D_TILE,
                interpret: bool = False) -> jax.Array:
-    """h (m, d); edge_src/mask (nd*fanout,) dst-major -> (nd, d)."""
-    m_nodes, d = h.shape
-    assert d % d_tile == 0 or d < d_tile, (d, d_tile)
-    dt = min(d, d_tile)
+    """h (m, d); edge_src/mask (nd*fanout,) dst-major -> (nd, d).
+
+    A feature dim not divisible by ``d_tile`` pads internally (zeros,
+    sliced off the output) instead of asserting, so arbitrary hidden
+    sizes work.
+    """
+    from repro.kernels.cache_lookup.cache_lookup import pad_to
+
+    m_nodes, d0 = h.shape
+    dt = min(d0, d_tile)
+    if d0 % dt:
+        h = pad_to(h, dt, 1, 0)
+    d = h.shape[1]
     grid = (nd, fanout, d // dt)
 
     cnt = jnp.sum(edge_mask.reshape(nd, fanout).astype(jnp.float32), axis=1)
@@ -71,4 +80,4 @@ def gather_agg(h: jax.Array, edge_src: jax.Array, edge_mask: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nd, d), h.dtype),
         interpret=interpret,
     )
-    return fn(edge_src.astype(jnp.int32), edge_mask, cnt, h)
+    return fn(edge_src.astype(jnp.int32), edge_mask, cnt, h)[:, :d0]

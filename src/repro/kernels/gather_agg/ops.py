@@ -3,16 +3,52 @@
 On CPU (or when ``use_kernel=False``) dispatches to the jnp oracle; on TPU
 it runs the Pallas kernel. ``interpret=True`` executes the kernel body in
 Python on CPU -- the validation mode the tests sweep.
+
+The kernel path carries a custom VJP so it can sit inside ``loss_fn``
+grads (the GNN forward's backend switch): the backward of the masked
+neighbor mean is a plain scatter-add over ``edge_src`` --
+``dh[src_e] += g[e // fanout] * mask_e / cnt[e // fanout]`` -- expressed
+as one ``segment_sum``, which XLA already emits well; only the forward
+gather+accumulate benefits from the fused VMEM kernel. The integer edge
+operands get float0 cotangents (they carry no gradient).
 """
 from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.gather_agg.gather_agg import gather_agg as _kernel_call
 from repro.kernels.gather_agg.ref import gather_agg_ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _kernel_with_vjp(h, edge_src, edge_mask, nd, fanout, interpret):
+    return _kernel_call(h, edge_src, edge_mask, nd, fanout,
+                        interpret=interpret)
+
+
+def _kernel_fwd(h, edge_src, edge_mask, nd, fanout, interpret):
+    out = _kernel_call(h, edge_src, edge_mask, nd, fanout,
+                       interpret=interpret)
+    return out, (h.shape[0], edge_src, edge_mask)
+
+
+def _kernel_bwd(nd, fanout, interpret, res, g):
+    m, edge_src, edge_mask = res
+    msk = edge_mask.reshape(nd, fanout)
+    cnt = jnp.maximum(msk.sum(axis=1).astype(g.dtype), 1.0)
+    ge = jnp.repeat(g / cnt[:, None], fanout, axis=0)       # (nd*fo, d)
+    msg = ge * edge_mask[:, None].astype(g.dtype)
+    dh = jax.ops.segment_sum(msg, edge_src, num_segments=m)
+    f0 = jax.dtypes.float0
+    return (dh, np.zeros(edge_src.shape, f0),
+            np.zeros(edge_mask.shape, f0))
+
+
+_kernel_with_vjp.defvjp(_kernel_fwd, _kernel_bwd)
 
 
 @partial(jax.jit, static_argnames=("nd", "fanout", "use_kernel",
@@ -21,6 +57,6 @@ def gather_agg(h: jax.Array, edge_src: jax.Array, edge_mask: jax.Array,
                *, nd: int, fanout: int, use_kernel: bool = False,
                interpret: bool = False) -> jax.Array:
     if use_kernel:
-        return _kernel_call(h, edge_src, edge_mask, nd, fanout,
-                            interpret=interpret)
+        return _kernel_with_vjp(h, edge_src, edge_mask, nd, fanout,
+                                interpret)
     return gather_agg_ref(h, edge_src, edge_mask, nd, fanout)

@@ -55,6 +55,12 @@ def main() -> None:
     ap.add_argument("--baseline", action="store_true",
                     help="lower the on-demand (no cache, non-overlapped) "
                          "baseline epoch instead of the pipelined one")
+    ap.add_argument("--assemble-backend", default="auto",
+                    choices=("auto", "fused", "ref", "staged"),
+                    help="feature-assembly path: fused single-pass "
+                         "Pallas kernel, jnp fused reference, or the "
+                         "legacy staged chain (auto: fused on TPU, "
+                         "ref elsewhere)")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
     P_ = 512 if args.multi_pod else 256
@@ -79,11 +85,15 @@ def main() -> None:
     t0 = time.time()
     with mesh:
         if args.baseline:
-            epoch_fn = make_ondemand_epoch(cfg, opt, mesh, m_max)
+            epoch_fn = make_ondemand_epoch(
+                cfg, opt, mesh, m_max,
+                assemble_backend=args.assemble_backend)
             lowered = jax.jit(epoch_fn).lower(params_s, opt_s, table,
                                               offsets, batches)
         else:
-            epoch_fn = make_pipelined_epoch(cfg, opt, mesh, m_max)
+            epoch_fn = make_pipelined_epoch(
+                cfg, opt, mesh, m_max,
+                assemble_backend=args.assemble_backend)
             lowered = jax.jit(epoch_fn).lower(params_s, opt_s, table,
                                               offsets, cids, cfeats,
                                               batches)
@@ -94,6 +104,7 @@ def main() -> None:
         "workload": ("rapidgnn-sage-ondemand" if args.baseline
                      else "rapidgnn-sage"), "workers": P_,
         "mesh": f"{P_} (data)",
+        "assemble_backend": args.assemble_backend,
         "compile_s": round(time.time() - t0, 1),
         "memory": {
             "argument_size_bytes": mem.argument_size_in_bytes,

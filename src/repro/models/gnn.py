@@ -4,20 +4,29 @@ The forward consumes the static-shape ``CollatedBatch`` layout: a padded
 input-node feature matrix ``h`` of shape (m_max, d) whose *dst prefix*
 property (dst nodes of every layer are a prefix of its src nodes, and the
 final seeds are ``h[:batch_size]``) lets all layers update the same
-buffer. Aggregation is masked ``segment_sum`` over the padded edge lists
--- on TPU this is the fused Pallas ``gather_agg`` kernel
-(repro/kernels/gather_agg.py); the jnp path here doubles as its oracle.
+buffer.
+
+Aggregation dispatches per ``GNNConfig.agg_backend``: the default
+``"segment"`` is masked ``segment_sum`` over the padded edge lists (the
+oracle and CPU path); ``"pallas"`` / ``"pallas_interpret"`` run the fused
+``kernels/gather_agg`` Pallas kernel, which exploits the deterministic
+sampler's dst-major fan-out-regular edge layout (every dst owns exactly
+``fanout`` contiguous edges, so the padded tail starts on a row boundary
+and aggregates to zero) -- ``cfg.fanouts`` must then carry the per-layer
+fan-outs. The kernel path has a custom VJP, so ``loss_fn`` grads work on
+every backend.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.schedule import CollatedBatch
+from repro.kernels.gather_agg.ops import gather_agg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +37,26 @@ class GNNConfig:
     num_classes: int
     num_layers: int
     dropout: float = 0.0      # (dry-run/CPU benches run deterministic)
+    #: per-layer sampler fan-outs (input->output); required by the
+    #: pallas aggregation backends (dst-major regular layout contract)
+    fanouts: Optional[Tuple[int, ...]] = None
+    #: "segment" (jnp segment_sum oracle) | "pallas" (fused gather_agg
+    #: kernel) | "pallas_interpret" (kernel body interpreted on CPU)
+    agg_backend: str = "segment"
+
+    def __post_init__(self):
+        if self.agg_backend not in ("segment", "pallas",
+                                    "pallas_interpret"):
+            raise ValueError(f"unknown agg_backend {self.agg_backend!r}")
+        if self.agg_backend != "segment":
+            if self.fanouts is None:
+                raise ValueError(
+                    "pallas aggregation needs cfg.fanouts (the dst-major "
+                    "fan-out-regular layout contract)")
+            if len(self.fanouts) < self.num_layers:
+                raise ValueError(
+                    f"cfg.fanouts has {len(self.fanouts)} entries for "
+                    f"{self.num_layers} layers")
 
 
 def init_params(cfg: GNNConfig, key: jax.Array) -> Dict[str, Any]:
@@ -61,12 +90,38 @@ def init_params(cfg: GNNConfig, key: jax.Array) -> Dict[str, Any]:
 def aggregate_mean(h: jnp.ndarray, edge_src: jnp.ndarray,
                    edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
                    num_segments: int) -> jnp.ndarray:
-    """Masked mean of src features into dst slots (the paper's AGG)."""
+    """Masked mean of src features into dst slots (the paper's AGG).
+    The jnp oracle; ``_aggregate`` may dispatch to the fused Pallas
+    kernel instead."""
     msg = h[edge_src] * edge_mask[:, None].astype(h.dtype)
     summed = jax.ops.segment_sum(msg, edge_dst, num_segments=num_segments)
     cnt = jax.ops.segment_sum(edge_mask.astype(h.dtype), edge_dst,
                               num_segments=num_segments)
     return summed / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def _aggregate(cfg: GNNConfig, layer: int, h: jnp.ndarray,
+               edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+               edge_mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Backend switch for the AGG: fused ``gather_agg`` when the config
+    opts in AND the padded edge list honours the fan-out-regular
+    contract (edge count divisible by the layer fan-out; the sampler's
+    dst-major layout with replacement guarantees it), else the
+    ``segment_sum`` oracle. Kernel output covers the dst prefix rows
+    only -- the tail up to ``m`` is zero on both paths (padded dst rows
+    are fully masked)."""
+    fo = cfg.fanouts[layer] if cfg.fanouts else 0
+    E = edge_src.shape[0]
+    if cfg.agg_backend != "segment" and fo > 0 and E % fo == 0:
+        nd = E // fo
+        agg = gather_agg(h, edge_src, edge_mask, nd=nd, fanout=fo,
+                         use_kernel=True,
+                         interpret=cfg.agg_backend == "pallas_interpret")
+        if nd < m:
+            agg = jnp.concatenate(
+                [agg, jnp.zeros((m - nd, h.shape[1]), agg.dtype)])
+        return agg[:m]
+    return aggregate_mean(h, edge_src, edge_dst, edge_mask, m)
 
 
 def forward(cfg: GNNConfig, params: Dict[str, Any],
@@ -77,7 +132,8 @@ def forward(cfg: GNNConfig, params: Dict[str, Any],
     h = features
     m = features.shape[0]
     for l, layer in enumerate(params["layers"]):
-        agg = aggregate_mean(h, edge_src[l], edge_dst[l], edge_mask[l], m)
+        agg = _aggregate(cfg, l, h, edge_src[l], edge_dst[l],
+                         edge_mask[l], m)
         if cfg.kind == "sage":
             h_new = h @ layer["w_self"] + agg @ layer["w_neigh"] + layer["b"]
         else:  # gcn: mean over {self} U neighbors (renormalisation trick)

@@ -63,6 +63,71 @@ def test_cache_lookup_sweep(n_hot, m, d):
     np.testing.assert_allclose(np.asarray(ref), np.asarray(ker), rtol=1e-6)
 
 
+@pytest.mark.parametrize("n_hot,m,d", [
+    (1000, 130, 129),    # nothing divides the (256, 1024, 128) tiles
+    (7, 3, 5),           # everything smaller than one tile
+    (0, 17, 128),        # empty cache
+    (33, 257, 384),
+])
+def test_cache_lookup_awkward_shapes(n_hot, m, d):
+    """Regression: ``search`` asserted m % tq == 0 / n_hot % tc == 0 and
+    ``merge_gather`` asserted d % d_tile == 0 -- an awkward batch size
+    crashed the compiled epoch. Internal padding must make any shape
+    agree with the oracle."""
+    rng = np.random.default_rng(n_hot + m)
+    ids = np.sort(rng.choice(10 ** 6, size=n_hot,
+                             replace=False)).astype(np.int32)
+    pool = ids if n_hot else np.array([5], np.int32)
+    q = np.concatenate([
+        rng.choice(pool, size=m // 2),
+        rng.integers(10 ** 6, 2 * 10 ** 6, size=m - m // 2)]
+    ).astype(np.int32)
+    feats = rng.normal(size=(n_hot, d)).astype(np.float32)
+    base = rng.normal(size=(m, d)).astype(np.float32)
+    args = (jnp.asarray(ids), jnp.asarray(feats), jnp.asarray(q),
+            jnp.asarray(base))
+    ref, hit_r = cache_lookup(*args, use_kernel=False)
+    ker, hit_k = cache_lookup(*args, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hit_r), np.asarray(hit_k))
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ker))
+
+
+def test_cache_lookup_sentinel_query_never_hits_padded_tail():
+    """Regression: internal n_hot padding appends INT32_MAX sentinel
+    entries; a sentinel-valued query must NOT match them (kernel and
+    oracle must agree the sentinel never hits)."""
+    n_hot, m, d = 1500, 8, 16          # 1500 % tc != 0 -> padded tail
+    rng = np.random.default_rng(1)
+    ids = np.sort(rng.choice(10 ** 6, size=n_hot,
+                             replace=False)).astype(np.int32)
+    feats = rng.normal(size=(n_hot, d)).astype(np.float32)
+    q = np.full(m, 2 ** 31 - 1, np.int32)
+    q[0] = ids[3]                      # one real hit for contrast
+    base = np.zeros((m, d), np.float32)
+    args = (jnp.asarray(ids), jnp.asarray(feats), jnp.asarray(q),
+            jnp.asarray(base))
+    ref, hit_r = cache_lookup(*args, use_kernel=False)
+    ker, hit_k = cache_lookup(*args, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hit_k), np.asarray(hit_r))
+    assert bool(hit_k[0]) and not np.asarray(hit_k)[1:].any()
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref))
+
+
+def test_gather_agg_awkward_feature_dim():
+    """Regression: d % d_tile assert -> internal padding."""
+    rng = np.random.default_rng(77)
+    nd, fanout, m, d = 7, 3, 40, 129
+    h = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    src = jnp.asarray(rng.integers(0, m, size=nd * fanout
+                                   ).astype(np.int32))
+    mask = jnp.asarray(rng.random(nd * fanout) > 0.3)
+    ref = gather_agg(h, src, mask, nd=nd, fanout=fanout, use_kernel=False)
+    ker = gather_agg(h, src, mask, nd=nd, fanout=fanout, use_kernel=True,
+                     interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_cache_lookup_empty_and_full_hit():
     d, m = 128, 256
     rng = np.random.default_rng(5)
