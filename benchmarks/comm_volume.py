@@ -1,8 +1,10 @@
 """Paper Fig. 4: mean data transferred per training step, RapidGNN vs
 DGL-METIS, across datasets and batch sizes.
 
-Two independent accountings of the same schedule are reported side by
-side so they can cross-checked (DESIGN.md §7):
+Thin campaign wrapper: the host-sim cells come from ``repro.eval.cells``
+and the device-path accounting from ``repro.eval.replay`` -- two
+independent accountings of the same schedule, reported side by side so
+they cross-check (DESIGN.md §7):
 
   * host-sim bytes  -- ``ShardedFeatureStore`` metering from the runner
     (remote_bytes + vector_pull_bytes), and
@@ -11,49 +13,15 @@ side so they can cross-checked (DESIGN.md §7):
     sim's remote_bytes exactly, while the wire column adds the padded
     all_to_all lanes (P * k_max rows/step) the static-shape collective
     actually moves.
+
+The same contract runs on the REAL device runners (not a replay) inside
+``python -m repro.eval.campaign`` as the ``miss_parity`` /
+``payload_bytes`` differential checks.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import run_gnn_system
-from repro.graph import load_dataset, partition_graph, KHopSampler
-from repro.core import build_schedule
-from repro.dist import DeviceView, build_pull_plan, epoch_k_max
-from repro.dist.gnn_step import _batch_miss
-
-
-def device_path_bytes(dataset: str, batch_size: int, workers: int,
-                      epochs: int, n_hot: int, s0: int = 42,
-                      worker: int = 0):
-    """-> (payload_bytes, wire_bytes, cache_bytes, steps) for one worker,
-    replaying the exact schedule ``run_gnn_system`` uses through the
-    device-path pull plans. The lane bound ``k_max`` is the ALL-workers
-    epoch maximum (``epoch_k_max``), as the compiled collective uses --
-    wire bytes reflect what actually moves, not worker-local padding."""
-    g = load_dataset(dataset)
-    pg = partition_graph(g, workers, "metis")
-    sampler = KHopSampler(g, fanouts=(25, 10), batch_size=batch_size)
-    ws_all = [build_schedule(sampler, pg, worker=w, s0=s0,
-                             num_epochs=epochs, n_hot=n_hot)
-              for w in range(workers)]
-    dv = DeviceView.build(pg)
-    row = g.feat_dim * g.features.itemsize
-    payload = wire = cache = steps = 0
-    for e in range(epochs):
-        es_list = [ws.epoch(e) for ws in ws_all]
-        caches = [dv.remap_cache(es.cache_ids) for es in es_list]
-        cache += es_list[worker].cache_ids.shape[0] * row   # VectorPull
-        k_max = epoch_k_max(es_list, caches, dv)
-        for b in es_list[worker].batches:
-            dev, miss = _batch_miss(b, caches[worker], dv, worker)
-            plan = build_pull_plan(dev[miss].astype(np.int32),
-                                   np.flatnonzero(miss).astype(np.int32),
-                                   dv.owner_d, pg.num_parts, k_max)
-            payload += plan.payload_bytes(row)
-            wire += plan.wire_bytes(row)
-            steps += 1
-    return payload, wire, cache, steps
+from repro.eval.replay import replay_device_bytes
 
 
 def run(datasets=("ogbn_products_sim", "reddit_sim"),
@@ -67,7 +35,7 @@ def run(datasets=("ogbn_products_sim", "reddit_sim"),
                                epochs=epochs, n_hot=n_hot, train=False)
             m = run_gnn_system("dgl-metis", ds, b, workers=workers,
                                epochs=epochs, train=False)
-            payload, wire, cache, steps = device_path_bytes(
+            payload, wire, cache, steps = replay_device_bytes(
                 ds, b, workers, epochs, n_hot)
             # ONE denominator for every per-step column: all steps of all
             # epochs (GNNResult.bytes_per_step drops epoch 0's steps but

@@ -1,6 +1,12 @@
 """Shared GNN experiment runner for the paper-table benchmarks.
 
-Systems (paper §5.1):
+Since the campaign subsystem landed (``repro.eval``, DESIGN.md §7) this
+is a thin compatibility wrapper: ``run_gnn_system`` builds one
+``CellSpec`` and delegates to ``repro.eval.cells.run_host_cell`` -- the
+same cell executor the paper-metrics campaign sweeps -- then re-shapes
+the unified ``CellResult`` into the historical ``GNNResult`` the CSV
+benchmarks format. Systems (paper §5.1):
+
   rapidgnn    -- full pipeline: greedy edge-cut partition + steady cache +
                  prefetcher (the paper's system; METIS stand-in)
   dgl-metis   -- on-demand synchronous fetch, greedy edge-cut partition
@@ -15,24 +21,21 @@ transfer time; prefetched fetches overlap) and all byte counts are exact.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, Optional
+from typing import Optional
 
-import jax
-import numpy as np
-
-from repro.graph import load_dataset, partition_graph, KHopSampler
-from repro.core import (build_schedule, ShardedFeatureStore,
-                        RapidGNNRunner, BaselineRunner, NetworkModel)
-from repro.models import (GNNConfig, init_params, make_train_step,
-                          batch_to_device)
-from repro.train import AdamW
+from repro.core import NetworkModel
+from repro.eval.cells import run_host_cell
+from repro.eval.spec import CellSpec
 
 SYSTEMS = ("rapidgnn", "dgl-metis", "dgl-random", "gcn")
 
 
 @dataclasses.dataclass
 class GNNResult:
+    """Historical single-worker view of a cell. Time/step fields are
+    WARM (epoch 0's JIT warm-up excluded when epochs > 1); byte/RPC
+    counters cover every epoch -- exactly the convention the CSV
+    benchmarks always used."""
     system: str
     dataset: str
     batch_size: int
@@ -61,67 +64,22 @@ def run_gnn_system(system: str, dataset: str, batch_size: int,
                    Q: int = 4, s0: int = 42, hidden: int = 64,
                    train: bool = True, net: Optional[NetworkModel] = None,
                    worker: int = 0) -> GNNResult:
-    g = load_dataset(dataset)
-    part = "random" if system == "dgl-random" else "metis"
-    pg = partition_graph(g, workers, part)
-    fanouts = (50, 50) if system == "gcn" else (25, 10)
-    sampler = KHopSampler(g, fanouts=fanouts, batch_size=batch_size)
-    ws = build_schedule(sampler, pg, worker=worker, s0=s0,
-                        num_epochs=epochs,
-                        n_hot=n_hot if system == "rapidgnn" else 0)
-
-    state = {"losses": [], "accs": []}
-    if train:
-        cfg = GNNConfig(kind="gcn" if system == "gcn" else "sage",
-                        in_dim=g.feat_dim, hidden_dim=hidden,
-                        num_classes=g.num_classes, num_layers=2)
-        params = init_params(cfg, jax.random.key(s0))
-        opt = AdamW(lr=3e-3)
-        opt_state = opt.init(params)
-        step = make_train_step(cfg, opt)
-        box = {"p": params, "o": opt_state}
-
-        def train_fn(feats, cb):
-            batch = batch_to_device(cb, feats)
-            box["p"], box["o"], aux = step(box["p"], box["o"], batch)
-            state["losses"].append(float(aux["loss"]))
-            state["accs"].append(float(aux["acc"]))
-            return state["losses"][-1]
-    else:
-        def train_fn(feats, cb):
-            return 0.0
-
-    net = net if net is not None else NetworkModel(enabled=True)
-    store = ShardedFeatureStore(pg, worker=worker, net=net)
-    if system == "rapidgnn":
-        runner = RapidGNNRunner(ws, store, batch_size=batch_size, Q=Q,
-                                train_fn=train_fn)
-    else:
-        runner = BaselineRunner(ws, store, batch_size=batch_size,
-                                train_fn=train_fn)
-    t0 = time.time()
-    m = runner.run()
-    wall = time.time() - t0
-    tot = m.totals()
-    # drop epoch 0 from time metrics (JIT warm-up), keep byte/RPC counts
-    if epochs > 1:
-        warm = m.epochs[0].wall_time_s
-        wall = sum(e.wall_time_s for e in m.epochs[1:])
-        tot["modeled_net_time_s"] -= m.epochs[0].modeled_net_time_s
-        tot["sync_net_time_s"] -= m.epochs[0].sync_net_time_s
-    steps_all = [ws.epoch(e).num_batches for e in range(epochs)]
-    steps = sum(steps_all[1:]) if epochs > 1 else sum(steps_all)
+    spec = CellSpec(backend="host", system=system, dataset=dataset,
+                    batch_size=batch_size, workers=workers, n_hot=n_hot,
+                    epochs=epochs, seed=s0, hidden=hidden, Q=Q,
+                    train=train, all_workers=False,
+                    net_enabled=net.enabled if net is not None else True)
+    cell = run_host_cell(spec, worker=worker, net=net)
     return GNNResult(
         system=system, dataset=dataset, batch_size=batch_size,
-        workers=workers, epochs=epochs, wall_time_s=wall,
-        step_time_ms=1e3 * wall / max(steps, 1),
-        net_time_s=tot["sync_net_time_s"],
-        rpc_count=int(tot["rpc_count"]),
-        remote_bytes=int(tot["remote_bytes"]),
-        vector_pull_bytes=int(tot["vector_pull_bytes"]),
-        hit_rate=tot["hit_rate"], num_steps=steps,
-        losses=state["losses"], accs=state["accs"],
-        device_cache_bytes=getattr(runner, "device_cache_bytes", 0))
+        workers=workers, epochs=epochs, wall_time_s=cell.warm_wall_s,
+        step_time_ms=cell.step_time_ms,
+        net_time_s=cell.warm_sync_net_time_s,
+        rpc_count=cell.rpc_count, remote_bytes=cell.remote_bytes,
+        vector_pull_bytes=cell.vector_pull_bytes,
+        hit_rate=cell.hit_rate, num_steps=cell.warm_steps,
+        losses=cell.losses, accs=cell.accs,
+        device_cache_bytes=cell.device_cache_bytes)
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

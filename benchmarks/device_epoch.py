@@ -1,16 +1,14 @@
 """Device rapid-vs-baseline epoch benchmark (paper Table 2, device path).
 
-Runs the multi-epoch device runners (``repro.dist.runner``) on 4 emulated
-host devices: ``DeviceRapidGNNRunner`` (C_s/C_sec double buffer +
-pipelined pull, one compilation across epochs) against
-``DeviceBaselineRunner`` (no cache, pull on the critical path). Step time
-excludes the compile epoch; lane counts are the exact residual-miss
-accounting the parity tests pin to the host-sim runner.
-
-The device count locks at first jax init, so the measurement runs in a
-subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
-(same pattern as tests/test_distributed.py); ``run()`` is safe to call
-from the single-device ``benchmarks.run`` process.
+Thin campaign wrapper: the two device-backend cells of the campaign's
+fast grid (``repro.eval.spec.fast_grid``) run through the SAME
+subprocess machinery the campaign uses (``repro.eval.cells.
+run_device_cells`` -- the device count locks at first jax init, so the
+cells execute in a child pinned to 4 emulated host devices), and the
+rows below are formatted from their unified ``CellResult`` records.
+Step time excludes the compile epoch; lane counts are the exact
+residual-miss accounting the campaign's ``miss_parity`` differential
+check pins to the host-sim runners.
 
 Caveat: on EMULATED host devices the all_to_all is a shared-memory copy,
 so the step-time ratio does not show the paper's network win -- the
@@ -18,94 +16,57 @@ miss-lane / payload columns carry that signal (9.7-15.4x fewer remote
 fetches at paper scale; ~2-3x on the tiny graph), and step time becomes
 meaningful on a real mesh where the pull has wire latency to hide.
 
-``python -m benchmarks.device_epoch``           -- parent (spawns child)
-``python -m benchmarks.device_epoch --child``   -- the measurement itself
+``python -m benchmarks.device_epoch``   -- runs the cells, prints rows
 """
 from __future__ import annotations
 
 import argparse
-import os
-import subprocess
-import sys
 from typing import List
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-HEADER = ("system,workers,epochs,steps_per_epoch,step_time_ms,"
+HEADER = ("system,workers,epochs,steps,step_time_ms,"
           "miss_lanes_per_epoch,payload_kb,wire_rows")
 
 
-def _child(epochs: int = 3, batch: int = 16, n_hot: int = 64) -> None:
-    import numpy as np
-    import jax
+def run(epochs: int = 3, results=None) -> List[str]:
+    """``results`` short-circuits measurement with already-run device
+    ``CellResult``s (benchmarks.run passes the paper_campaign section's
+    cells so the expensive SPMD subprocess runs once per invocation)."""
+    import dataclasses
 
-    from repro.graph import load_dataset, partition_graph, KHopSampler
-    from repro.core import build_schedule
-    from repro.models import GNNConfig
-    from repro.train import AdamW
-    from repro.dist import (DeviceView, DeviceRapidGNNRunner,
-                            DeviceBaselineRunner, make_mesh)
+    from repro.eval.cells import run_device_cells
+    from repro.eval.spec import fast_grid
 
-    P_ = jax.device_count()
-    g = load_dataset("tiny")
-    pg = partition_graph(g, P_, "greedy")
-    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=batch)
-    schedules = [build_schedule(sampler, pg, worker=w, s0=42,
-                                num_epochs=epochs, n_hot=n_hot)
-                 for w in range(P_)]
-    dv = DeviceView.build(pg)
-    mesh = make_mesh((P_,), ("data",))
-    cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=32,
-                    num_classes=g.num_classes, num_layers=2)
-
-    print(HEADER)
+    if results is None:
+        cells = [dataclasses.replace(c, epochs=epochs)
+                 for c in fast_grid().device_cells()]
+        results = run_device_cells(cells)
+    rows = [HEADER]
     step_ms = {}
-    for name, cls in (("device_rapidgnn", DeviceRapidGNNRunner),
-                      ("device_baseline", DeviceBaselineRunner)):
-        runner = cls(schedules, dv, cfg, AdamW(lr=3e-3), mesh, batch,
-                     g.labels)
-        reports = runner.run()
-        assert runner.trace_count == 1, \
-            f"{name}: {runner.trace_count} traces for {epochs} epochs"
-        warm = reports[1:] if len(reports) > 1 else reports   # skip compile
-        steps = sum(r.steps for r in warm)
-        ms = 1e3 * sum(r.wall_time_s for r in warm) / max(steps, 1)
-        step_ms[name] = ms
-        lanes = ";".join(str(r.total_miss_lanes) for r in reports)
-        payload = sum(r.payload_bytes(g.feat_dim) for r in reports)
-        print(f"{name},{P_},{epochs},{runner.num_steps},{ms:.3f},"
-              f"{lanes},{payload / 1024:.1f},{reports[0].wire_rows}")
-    speedup = step_ms["device_baseline"] / max(step_ms["device_rapidgnn"],
-                                               1e-9)
-    print(f"device_speedup,{P_},{epochs},-,{speedup:.2f}x,-,-,-")
-
-
-def run(epochs: int = 3) -> List[str]:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep +
-                         env.get("PYTHONPATH", ""))
-    r = subprocess.run(
-        [sys.executable, "-m", "benchmarks.device_epoch", "--child",
-         "--epochs", str(epochs)],
-        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT)
-    if r.returncode != 0:
-        raise RuntimeError(f"device_epoch child failed:\n{r.stdout}\n"
-                           f"{r.stderr}")
-    return [ln for ln in r.stdout.splitlines()
-            if ln.startswith(("system,", "device_"))]
+    for c in results:
+        name = ("device_rapidgnn" if c.system == "rapidgnn"
+                else "device_baseline")
+        step_ms[name] = c.step_time_ms
+        lanes = ";".join(str(sum(row)) for row in c.miss_matrix)
+        rows.append(
+            f"{name},{c.spec['workers']},{c.spec['epochs']},"
+            f"{c.num_steps},{c.step_time_ms:.3f},{lanes},"
+            f"{c.payload_bytes / 1024:.1f},{c.wire_rows}")
+        assert c.trace_count == 1, \
+            f"{name}: {c.trace_count} traces for " \
+            f"{c.spec['epochs']} epochs"
+    speedup = (step_ms["device_baseline"] /
+               max(step_ms["device_rapidgnn"], 1e-9))
+    rows.append(f"device_speedup,{results[0].spec['workers']},"
+                f"{results[0].spec['epochs']},-,{speedup:.2f}x,-,-,-")
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--child", action="store_true")
     ap.add_argument("--epochs", type=int, default=3)
     args = ap.parse_args()
-    if args.child:
-        _child(epochs=args.epochs)
-    else:
-        for row in run(epochs=args.epochs):
-            print(row)
+    for row in run(epochs=args.epochs):
+        print(row)
 
 
 if __name__ == "__main__":

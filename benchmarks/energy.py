@@ -1,30 +1,39 @@
 """Paper Table 3: modelled energy for RapidGNN vs DGL-METIS.
 
-Durations are measured on this box; component power envelopes are the
-paper's own Table 3 measurements (CPU 36.73/42.70 W, GPU 30.84/29.45 W).
-Reported as MODELLED energy: E = P_mean x duration. The paper's headline
-ratios (CPU -44 %, GPU -32 %) reproduce iff our duration ratio matches
-its 35 % time reduction."""
+Thin campaign wrapper: the two systems run as host-backend campaign
+cells and the ratios come from ``repro.eval.report.derive_pair`` (the
+``energy`` block of ``BENCH_paper.json``). Durations are measured on
+this box; component power envelopes are the paper's own Table 3
+measurements (CPU 36.73/42.70 W, GPU 30.84/29.45 W). Reported as
+MODELLED energy: E = P_mean x duration. The paper's headline ratios
+(CPU -44 %, GPU -32 %) reproduce iff our duration ratio matches its
+35 % time reduction."""
 from __future__ import annotations
 
-from repro.core import modelled_energy, POWER
-from benchmarks.common import run_gnn_system
+from repro.core import POWER
+from repro.eval.cells import run_host_cell
+from repro.eval.report import derive_pair
+from repro.eval.spec import CellSpec
 
 
 def run(dataset="ogbn_products_sim", batch_size=300, workers=3,
         epochs=2):
-    r = run_gnn_system("rapidgnn", dataset, batch_size, workers=workers,
-                       epochs=epochs, train=True)
-    m = run_gnn_system("dgl-metis", dataset, batch_size, workers=workers,
-                       epochs=epochs, train=True)
-    er = modelled_energy(r.wall_time_s, "rapidgnn")
-    em = modelled_energy(m.wall_time_s, "baseline")
+    def cell(system):
+        return run_host_cell(CellSpec(
+            backend="host", system=system, dataset=dataset,
+            batch_size=batch_size, workers=workers, n_hot=32768,
+            epochs=epochs, hidden=64, train=True, all_workers=False))
+
+    r, m = cell("rapidgnn"), cell("dgl-metis")
+    pair = derive_pair(r, m)
+    er, em = r.energy, m.energy
     rows = ["metric,rapidgnn,dgl_metis,ratio"]
-    rows.append(f"duration_s,{r.wall_time_s:.2f},{m.wall_time_s:.2f},"
-                f"{r.wall_time_s / m.wall_time_s:.2f}")
-    for k in ("cpu_J", "gpu_J", "total_J"):
-        rows.append(f"{k},{er[k]:.1f},{em[k]:.1f},"
-                    f"{er[k] / em[k]:.2f}")
+    rows.append(f"duration_s,{r.warm_wall_s:.2f},{m.warm_wall_s:.2f},"
+                f"{r.warm_wall_s / m.warm_wall_s:.2f}")
+    for k, ratio in (("cpu_J", pair["energy"]["cpu_ratio"]),
+                     ("gpu_J", pair["energy"]["gpu_ratio"]),
+                     ("total_J", pair["energy"]["total_ratio"])):
+        rows.append(f"{k},{er[k]:.1f},{em[k]:.1f},{ratio:.2f}")
     rows.append(f"mean_power_cpu_W,{POWER['rapidgnn']['cpu']},"
                 f"{POWER['baseline']['cpu']},-")
     rows.append(f"mean_power_gpu_W,{POWER['rapidgnn']['gpu']},"

@@ -4,13 +4,38 @@
 ``python -m benchmarks.run --full`` -- paper-scale grids (slow)
 
 Prints CSV blocks per benchmark plus a ``name,us_per_call,derived``
-summary line per section (harness contract).
+summary line per section (harness contract), and writes EVERY section
+as machine-readable JSON to ``artifacts/BENCH_<name>.json``:
+``{"section", "status", "us", "summary", "rows"}`` -- the rows split
+into header/records when the first row is a CSV header. Sections with
+richer native records (assemble) additionally write their own files,
+and the cross-backend paper grid lives in ``BENCH_paper.json``
+(``python -m repro.eval.campaign``, DESIGN.md §7).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import traceback
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(ROOT, "artifacts")
+
+
+def _write_section_json(name, status, us, summary, rows):
+    rec = {"section": name, "status": status, "us": round(us, 1),
+           "summary": summary, "rows": rows}
+    if rows and isinstance(rows[0], str) and "," in rows[0]:
+        header = rows[0].split(",")
+        body = [r.split(",") for r in rows[1:]]
+        if all(len(b) == len(header) for b in body):
+            rec["columns"] = header
+            rec["records"] = [dict(zip(header, b)) for b in body]
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"BENCH_{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
 
 
 def _section(name, fn, summary):
@@ -21,11 +46,14 @@ def _section(name, fn, summary):
         for r in rows:
             print(r)
         dt = (time.time() - t0) * 1e6
-        print(f"#summary {name},{dt:.0f},{summary(rows)}")
+        s = summary(rows)
+        print(f"#summary {name},{dt:.0f},{s}")
+        _write_section_json(name, "ok", dt, str(s), list(rows))
         return rows
     except Exception as e:
         print(f"#summary {name},0,FAILED:{e}")
         traceback.print_exc()
+        _write_section_json(name, "failed", 0.0, f"FAILED:{e}", [])
         return []
 
 
@@ -72,8 +100,55 @@ def main() -> None:
              lambda rows: rows[-1] if rows else "-")
     _section("beyond_embedding_cache", embedding_cache.run,
              lambda rows: rows[-1] if rows else "-")
-    _section("device_epoch",
-             lambda: device_epoch.run(epochs=epochs + 1),
+    campaign_box = {}
+
+    def _campaign():
+        """Paired host+device grid -> BENCH_paper.json (DESIGN.md §7);
+        a differential-check failure fails the whole section. The
+        device CellResults are stashed so the device_epoch section
+        reuses them instead of re-running the SPMD subprocess."""
+        from repro.eval.campaign import run_campaign
+        from repro.eval.spec import fast_grid, full_grid
+
+        rep = run_campaign(full_grid() if args.full else fast_grid(),
+                           out_path=os.path.join(ART,
+                                                 "BENCH_paper.json"))
+        campaign_box["report"] = rep
+        rows = ["backend,baseline,dataset,batch,throughput_speedup,"
+                "fetch_reduction_x,energy_total_ratio"]
+        for p in rep["pairs"]:
+            sc = p["scenario"]
+            rows.append(f"{p['backend']},{p['baseline_system']},"
+                        f"{sc['dataset']},{sc['batch_size']},"
+                        f"{p['throughput_speedup']},"
+                        f"{p['fetch_reduction_x']},"
+                        f"{p['energy']['total_ratio']}")
+        n_fail = sum(1 for c in rep["differential"]
+                     if c["status"] == "FAIL")
+        n_pass = sum(1 for c in rep["differential"]
+                     if c["status"] == "PASS")
+        rows.append(f"differential,-,-,-,{n_pass}_pass,{n_fail}_fail,"
+                    f"{'OK' if rep['all_checks_pass'] else 'BAD'}")
+        if not rep["all_checks_pass"]:
+            raise RuntimeError(f"{n_fail} differential check(s) failed")
+        return rows
+
+    _section("paper_campaign", _campaign,
+             lambda rows: rows[-1] if rows else "-")
+
+    def _device_epoch():
+        from repro.eval.cells import CellResult
+
+        rep = campaign_box.get("report")
+        reuse = None
+        if rep is not None:
+            dev = [CellResult.from_dict(d) for d in rep["cells"]
+                   if d["spec"]["backend"] == "device"]
+            if dev and all(d.spec["epochs"] == epochs + 1 for d in dev):
+                reuse = dev
+        return device_epoch.run(epochs=epochs + 1, results=reuse)
+
+    _section("device_epoch", _device_epoch,
              lambda rows: rows[-1] if rows else "-")
     _section("assemble_collation", assemble.run,
              lambda rows: rows[-1] if rows else "-")

@@ -1,10 +1,24 @@
 """Paper Table 2: step-time + network-time speedup of RapidGNN over
-DGL-METIS / DGL-Random / Dist-GCN across datasets x batch sizes."""
+DGL-METIS / DGL-Random / Dist-GCN across datasets x batch sizes.
+
+Thin campaign wrapper: each (dataset, batch) point runs the four
+systems as host-backend campaign cells (``repro.eval.cells``) and the
+ratios come from ``repro.eval.report.derive_pair`` -- the identical
+derivation ``BENCH_paper.json`` pins."""
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import run_gnn_system, csv_row, GNNResult
+from repro.eval.cells import run_host_cell
+from repro.eval.report import derive_pair
+from repro.eval.spec import CellSpec, HOST_SYSTEMS
+
+
+def _cells_for(ds: str, b: int, workers: int, epochs: int, train: bool):
+    return {s: run_host_cell(CellSpec(
+        backend="host", system=s, dataset=ds, batch_size=b,
+        workers=workers, n_hot=32768, epochs=epochs, hidden=64,
+        train=train, all_workers=False)) for s in HOST_SYSTEMS}
 
 
 def run(datasets=("ogbn_products_sim", "reddit_sim"),
@@ -17,16 +31,15 @@ def run(datasets=("ogbn_products_sim", "reddit_sim"),
     agg = {k: [] for k in ("sm", "sr", "sg", "nm", "nr", "ng")}
     for ds in datasets:
         for b in batch_sizes:
-            res = {s: run_gnn_system(s, ds, b, workers=workers,
-                                     epochs=epochs, train=train)
-                   for s in ("rapidgnn", "dgl-metis", "dgl-random", "gcn")}
-            r = res["rapidgnn"]
+            res = _cells_for(ds, b, workers, epochs, train)
+            pairs = {s: derive_pair(res["rapidgnn"], res[s])
+                     for s in HOST_SYSTEMS if s != "rapidgnn"}
 
             def step_x(s):
-                return res[s].step_time_ms / max(r.step_time_ms, 1e-9)
+                return pairs[s]["throughput_speedup"]
 
             def net_x(s):
-                return res[s].net_time_s / max(r.net_time_s, 1e-9)
+                return pairs[s]["net_time_speedup"] or 0.0
 
             vals = (step_x("dgl-metis"), step_x("dgl-random"),
                     step_x("gcn"), net_x("dgl-metis"),

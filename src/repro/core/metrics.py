@@ -53,6 +53,9 @@ class NetworkModel:
 
 @dataclasses.dataclass
 class EpochMetrics:
+    """Per-epoch counters. Every field is a plain int/float so the whole
+    record serializes losslessly through ``to_dict``/``from_dict`` (the
+    campaign's ``CellResult`` export, repro/eval)."""
     epoch: int = 0
     rpc_count: int = 0               # paper's rpc_e: SyncPull calls' ids
     sync_pull_calls: int = 0
@@ -74,10 +77,29 @@ class EpochMetrics:
         t = self.cache_hits + self.cache_misses
         return self.cache_hits / t if t else 0.0
 
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "EpochMetrics":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
 
 @dataclasses.dataclass
 class RunMetrics:
     epochs: List[EpochMetrics] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-ready view: the per-epoch records plus the aggregate
+        ``totals()`` (already derived, so consumers never re-sum)."""
+        return {"epochs": [e.to_dict() for e in self.epochs],
+                "totals": self.totals()}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "RunMetrics":
+        return cls(epochs=[EpochMetrics.from_dict(e)
+                           for e in d["epochs"]])
 
     def totals(self) -> Dict[str, float]:
         out: Dict[str, float] = {}

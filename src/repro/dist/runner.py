@@ -63,6 +63,17 @@ class DeviceEpochReport:
         """True feature bytes requested (== host-sim remote_bytes)."""
         return self.total_miss_lanes * feat_dim * itemsize
 
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready export: ``repro.eval.cells.device_cell_result``
+        stores these per-epoch records on the campaign ``CellResult``
+        (the ``epoch_metrics`` field of ``BENCH_paper.json``)."""
+        return {"epoch": self.epoch, "steps": self.steps,
+                "miss_lanes": [int(x) for x in self.miss_lanes],
+                "wire_rows": int(self.wire_rows),
+                "losses": [float(x) for x in self.losses],
+                "accs": [float(x) for x in self.accs],
+                "wall_time_s": float(self.wall_time_s)}
+
 
 class _DeviceRunnerBase:
     """Shared epoch-loop machinery; subclasses pick program + caches."""
@@ -116,6 +127,7 @@ class _DeviceRunnerBase:
         self._fn = jax.jit(self._counted(self._make_epoch_fn()))
         self.params: Optional[Any] = None
         self.opt_state: Optional[Any] = None
+        self.stage_time_s = 0.0     # host-side staging wall (cumulative)
 
     def _caches_for(self, es_list, ids_only: bool = False
                     ) -> List[DeviceCache]:
@@ -137,6 +149,13 @@ class _DeviceRunnerBase:
     # -- per-epoch staging (the host half of the double buffer) ---------
 
     def _stage(self, e: int) -> Dict[str, Any]:
+        t0 = time.perf_counter()
+        try:
+            return self._stage_inner(e)
+        finally:
+            self.stage_time_s += time.perf_counter() - t0
+
+    def _stage_inner(self, e: int) -> Dict[str, Any]:
         es_list = [ws.epoch(e) for ws in self.schedules]
         caches = self._caches_for(es_list)
         batches = collate_device_epoch(
@@ -161,7 +180,20 @@ class _DeviceRunnerBase:
 
     # -- the epoch loop --------------------------------------------------
 
-    def run(self, params=None, opt_state=None) -> List[DeviceEpochReport]:
+    def run(self, params=None, opt_state=None, start_epoch: int = 0,
+            stop_epoch: Optional[int] = None) -> List[DeviceEpochReport]:
+        """Drive epochs ``[start_epoch, stop_epoch)`` (defaults: all).
+
+        The window exists for checkpoint resume: run ``[0, k)``, save
+        ``self.params``/``self.opt_state``, then a FRESH runner restored
+        from the checkpoint runs ``[k, N)`` -- static bounds are global,
+        so both windows share one compiled program and the concatenated
+        loss curve matches an uninterrupted run bit-for-bit."""
+        if stop_epoch is None:
+            stop_epoch = self.num_epochs
+        if not 0 <= start_epoch < stop_epoch <= self.num_epochs:
+            raise ValueError(f"bad epoch window [{start_epoch}, "
+                             f"{stop_epoch}) for {self.num_epochs} epochs")
         if params is None:
             params = init_params(self.cfg, jax.random.key(self.seed))
         if opt_state is None:
@@ -169,16 +201,16 @@ class _DeviceRunnerBase:
         table = jnp.asarray(self.dv.table)
         offsets = jnp.asarray(self.dv.offsets)
         reports: List[DeviceEpochReport] = []
-        staged = self._stage(0)         # bootstrap C_s (Alg. 1 l.4)
+        staged = self._stage(start_epoch)   # bootstrap C_s (Alg. 1 l.4)
         with self.mesh:
-            for e in range(self.num_epochs):
+            for e in range(start_epoch, stop_epoch):
                 t0 = time.perf_counter()
                 params, opt_state, losses, accs = self._run_epoch(
                     params, opt_state, table, offsets, staged)
                 # dispatch is async: stage epoch e+1's C_sec + plans on
                 # the host WHILE the device trains epoch e ...
                 nxt = (self._stage(e + 1)
-                       if e + 1 < self.num_epochs else None)
+                       if e + 1 < stop_epoch else None)
                 losses = np.asarray(losses)     # block on the device epoch
                 accs = np.asarray(accs)
                 reports.append(DeviceEpochReport(

@@ -1,0 +1,42 @@
+"""Paper-metrics campaign subsystem (DESIGN.md §7).
+
+One evaluation pipeline for the whole repo: declarative ``CampaignSpec``
+grids sweep {host-sim, device} x {rapid, baseline} x scenario cells into
+a unified ``CellResult`` schema, derive the paper's headline ratios
+(throughput speedup, remote-fetch reduction, modelled CPU/GPU energy),
+and differentially verify every paired cell -- host miss counters vs
+device pull lanes, byte accounting, loss-curve agreement -- so the
+benchmark campaign doubles as a system-level correctness harness.
+
+Entry point: ``python -m repro.eval.campaign --fast`` (or ``--full``);
+artifact: ``artifacts/BENCH_paper.json``.
+"""
+from repro.eval.spec import (CellSpec, CampaignSpec, grid, fast_grid,
+                             full_grid, tiny_host_grid, HOST_SYSTEMS,
+                             DEVICE_SYSTEMS)
+from repro.eval.cells import (CellResult, run_host_cell,
+                              run_device_cells, device_cell_result)
+from repro.eval.differential import (CheckResult, verify_cells,
+                                     check_cell_internal,
+                                     check_backend_pair,
+                                     check_system_pair, all_pass,
+                                     failures)
+from repro.eval.report import (SCHEMA, PAPER_TARGETS, derive_pair,
+                               derive_pairs, build_report, write_report,
+                               validate_report)
+from repro.eval.replay import replay_device_bytes
+# NOTE: repro.eval.campaign (the CLI + run_campaign) is intentionally
+# NOT imported here: `python -m repro.eval.campaign` would otherwise
+# re-import it under two names (runpy RuntimeWarning).
+
+__all__ = [
+    "CellSpec", "CampaignSpec", "grid", "fast_grid", "full_grid",
+    "tiny_host_grid", "HOST_SYSTEMS", "DEVICE_SYSTEMS",
+    "CellResult", "run_host_cell", "run_device_cells",
+    "device_cell_result",
+    "CheckResult", "verify_cells", "check_cell_internal",
+    "check_backend_pair", "check_system_pair", "all_pass", "failures",
+    "SCHEMA", "PAPER_TARGETS", "derive_pair", "derive_pairs",
+    "build_report", "write_report", "validate_report",
+    "replay_device_bytes",
+]

@@ -1,0 +1,133 @@
+"""Paper-metrics campaign runner + CLI.
+
+``python -m repro.eval.campaign --fast``   -- CPU-sized paired grid:
+host-sim AND device runners over the tiny graph, every host/device and
+rapid/baseline pair differentially verified in-line, headline ratios
+(throughput speedup, fetch reduction, modelled energy) derived per
+pair, everything written to ``artifacts/BENCH_paper.json``.
+
+``--full`` swaps in the paper-scale host grid (Tables 2/3 axes; slow).
+``--host-only`` skips the device subprocess (e.g. minimal CI images).
+``--inject-miscount`` perturbs one cell's counters AFTER measurement --
+the differential layer must then fail and the CLI exit non-zero; this
+is the self-test proving the checks have teeth.
+
+Exit code: 0 iff every differential check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Callable, List, Optional
+
+from repro.eval.spec import CampaignSpec, fast_grid, full_grid
+from repro.eval.cells import (CellResult, run_host_cell,
+                              run_device_cells, device_child_main)
+from repro.eval.differential import verify_cells
+from repro.eval.report import build_report, write_report
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_OUT = os.path.join(ROOT, "artifacts", "BENCH_paper.json")
+
+
+def run_campaign(spec: CampaignSpec, include_device: bool = True,
+                 out_path: Optional[str] = None,
+                 log: Callable[[str], None] = lambda s: None,
+                 mutate_cells: Optional[Callable[[List[CellResult]],
+                                                 None]] = None) -> dict:
+    """Run every cell, verify, derive ratios, optionally write the
+    artifact. ``mutate_cells`` is the injection hook: it edits the
+    measured cells before verification (tests + ``--inject-miscount``
+    use it to prove a perturbed counter is caught)."""
+    cells: List[CellResult] = []
+    for c in spec.host_cells():
+        log(f"[cell] {c.label()} ...")
+        cells.append(run_host_cell(c))
+        log(f"[cell] {c.label()} done: "
+            f"step={cells[-1].step_time_ms:.2f}ms "
+            f"rpc={cells[-1].rpc_count}")
+    dev = spec.device_cells()
+    if dev and include_device:
+        log(f"[cell] {len(dev)} device cell(s) via subprocess ...")
+        cells.extend(run_device_cells(dev))
+        for c in cells[-len(dev):]:
+            log(f"[cell] {c.spec['backend']}/{c.spec['system']} done: "
+                f"step={c.step_time_ms:.2f}ms lanes={c.rpc_count}")
+    if mutate_cells is not None:
+        mutate_cells(cells)
+    checks = verify_cells(cells)
+    report = build_report(spec.name, cells, checks)
+    if out_path:
+        write_report(report, out_path)
+        log(f"[out] {out_path}")
+    return report
+
+
+def _print_report(report: dict) -> None:
+    print(f"campaign={report['campaign']} cells={report['num_cells']} "
+          f"pairs={len(report['pairs'])}")
+    for p in report["pairs"]:
+        sc = p["scenario"]
+        print(f"  {p['backend']:6s} rapid vs {p['baseline_system']:10s} "
+              f"{sc['dataset']}/b{sc['batch_size']}: "
+              f"speedup={p['throughput_speedup']}x "
+              f"fetch_reduction={p['fetch_reduction_x']}x "
+              f"energy_total_ratio={p['energy']['total_ratio']}")
+    n_fail = sum(1 for c in report["differential"]
+                 if c["status"] == "FAIL")
+    n_pass = sum(1 for c in report["differential"]
+                 if c["status"] == "PASS")
+    print(f"differential: {n_pass} passed, {n_fail} failed")
+    for c in report["differential"]:
+        if c["status"] == "FAIL":
+            print(f"  FAIL {c['check']} @ {c['cell']}: {c['detail']}")
+
+
+def _inject_miscount(cells: List[CellResult]) -> None:
+    """Perturb one measured counter (the self-test of the checks)."""
+    c = cells[0]
+    c.rpc_count += 1
+    if c.miss_matrix and c.miss_matrix[0]:
+        c.miss_matrix[0][0] += 1
+    print(f"[inject] perturbed counters of "
+          f"{c.spec['backend']}/{c.spec['system']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="RapidGNN paper-metrics campaign")
+    ap.add_argument("--fast", action="store_true",
+                    help="CPU-sized paired grid (default)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale host grid + device pair (slow)")
+    ap.add_argument("--host-only", action="store_true",
+                    help="skip device-backend cells (no subprocess)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="artifact path (default artifacts/"
+                         "BENCH_paper.json)")
+    ap.add_argument("--inject-miscount", action="store_true",
+                    help="perturb one cell's counters post-measurement; "
+                         "differential checks must fail")
+    # internal: the device-cell worker (spawned by run_device_cells
+    # with XLA_FLAGS pinning the emulated device count)
+    ap.add_argument("--device-child", nargs=2,
+                    metavar=("SPECS", "OUT"), help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.device_child:
+        device_child_main(*args.device_child)
+        return 0
+
+    spec = full_grid() if args.full else fast_grid()
+    report = run_campaign(
+        spec, include_device=not args.host_only, out_path=args.out,
+        log=print,
+        mutate_cells=_inject_miscount if args.inject_miscount else None)
+    _print_report(report)
+    return 0 if report["all_checks_pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

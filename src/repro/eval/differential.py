@@ -1,0 +1,223 @@
+"""Differential verification: the campaign doubles as a correctness
+harness (DESIGN.md §7).
+
+Three layers, all operating on serialized ``CellResult`` records (so a
+corrupted counter in the artifact is caught exactly like a live one):
+
+  * internal      -- accounting identities within one cell: remote bytes
+                     == fetched rows x row bytes, the per-(epoch, worker)
+                     miss matrix sums to the scalar counter, device cells
+                     compiled exactly once.
+  * cross-backend -- host-sim vs device cells of the SAME system +
+                     scenario: the device pull-lane miss matrix must
+                     equal the host ``cache_misses`` matrix per (epoch,
+                     worker) (the ``assert_host_parity`` contract,
+                     generalized to every paired cell of a campaign),
+                     payload bytes must match, and the rapid cells'
+                     VectorPull staging bytes must match.
+  * cross-system  -- rapid vs baseline cells of the SAME backend +
+                     scenario: identical schedules + exact feature paths
+                     imply bit-identical loss curves (the cache is
+                     lossless), and rapid may never fetch more than the
+                     baseline.
+
+Every check yields a ``CheckResult``; ``verify_cells`` never raises --
+the campaign collects FAILs into the report and the CLI exits non-zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.eval.cells import CellResult
+
+PASS, FAIL, SKIP = "PASS", "FAIL", "SKIP"
+
+#: loss agreement only holds between systems sampling identical blocks
+#: (gcn uses wider fanouts, dgl-random a different partition -> different
+#: schedules); these two share everything but the cache.
+LOSS_COMPARABLE = {"rapidgnn", "dgl-metis"}
+
+
+@dataclasses.dataclass
+class CheckResult:
+    cell: str                   # label of the (primary) cell checked
+    check: str
+    status: str                 # PASS | FAIL | SKIP
+    detail: str = ""
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+
+def _label(c: CellResult) -> str:
+    s = c.spec
+    return (f"{s['backend']}/{s['system']}/{s['dataset']}"
+            f"/b{s['batch_size']}/w{s['workers']}/h{s['n_hot']}"
+            f"/e{s['epochs']}")
+
+
+def _scenario(c: CellResult) -> Tuple:
+    """EFFECTIVE schedule key (CellSpec.scenario_key): equal keys really
+    did consume identical schedules, so dgl-random / gcn cells -- whose
+    partition/fanouts differ by design -- never pair with rapidgnn."""
+    from repro.eval.spec import CellSpec
+    return CellSpec.from_dict(c.spec).scenario_key()
+
+
+# ---------------------------------------------------------------------------
+# layer 1: internal identities
+# ---------------------------------------------------------------------------
+
+def check_cell_internal(c: CellResult) -> List[CheckResult]:
+    out = []
+    name = _label(c)
+
+    want = c.rpc_count * c.row_bytes
+    out.append(CheckResult(name, "bytes_identity",
+                           PASS if c.remote_bytes == want else FAIL,
+                           f"remote_bytes={c.remote_bytes} vs "
+                           f"rpc_count*row={want}"))
+
+    msum = int(np.asarray(c.miss_matrix, dtype=np.int64).sum())
+    out.append(CheckResult(name, "miss_matrix_sum",
+                           PASS if msum == c.cache_misses else FAIL,
+                           f"sum(miss_matrix)={msum} vs "
+                           f"cache_misses={c.cache_misses}"))
+
+    if c.backend == "device":
+        out.append(CheckResult(
+            name, "one_compilation",
+            PASS if c.trace_count == 1 else FAIL,
+            f"trace_count={c.trace_count} (multi-epoch runner must "
+            f"compile once)"))
+        out.append(CheckResult(
+            name, "payload_identity",
+            PASS if c.payload_bytes == c.cache_misses * c.row_bytes
+            else FAIL,
+            f"payload_bytes={c.payload_bytes} vs "
+            f"lanes*row={c.cache_misses * c.row_bytes}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer 2: host vs device (same system, same scenario)
+# ---------------------------------------------------------------------------
+
+def check_backend_pair(host: CellResult, dev: CellResult
+                       ) -> List[CheckResult]:
+    out = []
+    name = f"{_label(host)} <> {_label(dev)}"
+    if host.workers_run != dev.workers_run:
+        return [CheckResult(name, "miss_parity", SKIP,
+                            f"host ran workers {host.workers_run}, "
+                            f"device {dev.workers_run} -- run the host "
+                            f"cell with all_workers=True to pair")]
+
+    hm = np.asarray(host.miss_matrix, dtype=np.int64)
+    dm = np.asarray(dev.miss_matrix, dtype=np.int64)
+    if hm.shape != dm.shape:
+        out.append(CheckResult(name, "miss_parity", FAIL,
+                               f"shape {hm.shape} vs {dm.shape}"))
+    elif not np.array_equal(hm, dm):
+        bad = np.argwhere(hm != dm)[:4].tolist()
+        out.append(CheckResult(
+            name, "miss_parity", FAIL,
+            f"device pull-lane counts diverge from host cache_misses "
+            f"at (epoch, worker) {bad}"))
+    else:
+        out.append(CheckResult(name, "miss_parity", PASS,
+                               f"{hm.shape[0]}x{hm.shape[1]} matrix "
+                               f"equal, total={int(hm.sum())}"))
+
+    out.append(CheckResult(
+        name, "payload_bytes",
+        PASS if host.remote_bytes == dev.payload_bytes else FAIL,
+        f"host remote_bytes={host.remote_bytes} vs device "
+        f"payload={dev.payload_bytes}"))
+
+    if host.system == "rapidgnn":
+        out.append(CheckResult(
+            name, "vector_pull_bytes",
+            PASS if host.vector_pull_bytes == dev.vector_pull_bytes
+            else FAIL,
+            f"host C_s/C_sec staging={host.vector_pull_bytes} vs "
+            f"device={dev.vector_pull_bytes}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer 3: rapid vs baseline (same backend, same scenario)
+# ---------------------------------------------------------------------------
+
+def check_system_pair(rapid: CellResult, base: CellResult
+                      ) -> List[CheckResult]:
+    out = []
+    name = f"{_label(rapid)} <> {_label(base)}"
+
+    out.append(CheckResult(
+        name, "fetch_not_more",
+        PASS if rapid.rpc_count <= base.rpc_count else FAIL,
+        f"rapid fetches {rapid.rpc_count} vs baseline "
+        f"{base.rpc_count}"))
+
+    if (base.system in LOSS_COMPARABLE and rapid.spec["train"]
+            and base.spec["train"]):
+        rl, bl = np.asarray(rapid.losses), np.asarray(base.losses)
+        if rl.shape != bl.shape:
+            out.append(CheckResult(name, "loss_agreement", FAIL,
+                                   f"curve lengths {rl.shape} vs "
+                                   f"{bl.shape}"))
+        elif not np.allclose(rl, bl, rtol=1e-4, atol=1e-5):
+            i = int(np.argmax(np.abs(rl - bl)))
+            out.append(CheckResult(
+                name, "loss_agreement", FAIL,
+                f"curves diverge at step {i}: {rl[i]:.6f} vs "
+                f"{bl[i]:.6f} (cache must be lossless)"))
+        else:
+            out.append(CheckResult(name, "loss_agreement", PASS,
+                                   f"{rl.shape[0]} steps agree"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# campaign-level driver
+# ---------------------------------------------------------------------------
+
+def verify_cells(cells: Sequence[CellResult]) -> List[CheckResult]:
+    """All applicable checks over a campaign's cells. Pairings are
+    derived from the specs: equal scenario + system across backends,
+    equal scenario + backend across systems."""
+    out: List[CheckResult] = []
+    for c in cells:
+        out.extend(check_cell_internal(c))
+
+    by_sys: Dict[Tuple, Dict[str, CellResult]] = {}
+    by_backend: Dict[Tuple, Dict[str, CellResult]] = {}
+    for c in cells:
+        by_sys.setdefault((_scenario(c), c.system), {})[c.backend] = c
+        by_backend.setdefault((_scenario(c), c.backend),
+                              {})[c.system] = c
+
+    for group in by_sys.values():
+        if "host" in group and "device" in group:
+            out.extend(check_backend_pair(group["host"],
+                                          group["device"]))
+    for group in by_backend.values():
+        rapid = group.get("rapidgnn")
+        if rapid is None:
+            continue
+        for sysname, cell in sorted(group.items()):
+            if sysname != "rapidgnn":
+                out.extend(check_system_pair(rapid, cell))
+    return out
+
+
+def all_pass(checks: Sequence[CheckResult]) -> bool:
+    return all(c.status != FAIL for c in checks)
+
+
+def failures(checks: Sequence[CheckResult]) -> List[CheckResult]:
+    return [c for c in checks if c.status == FAIL]

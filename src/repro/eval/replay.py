@@ -1,0 +1,58 @@
+"""Host-side replay of the device pull plans for byte accounting.
+
+Rebuilds the exact deterministic schedule a host-sim cell consumed and
+pushes every batch through ``build_pull_plan``, yielding the device
+path's payload (true residual-miss rows -- must equal the host sim's
+``remote_bytes`` exactly) and wire bytes (the padded all_to_all lanes
+the static-shape collective actually moves). Pure numpy: no mesh, no
+subprocess -- this is the single-device cross-check used by the
+``fig4_comm_volume`` benchmark; full on-mesh accounting comes from the
+campaign's device cells.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def replay_device_bytes(dataset: str, batch_size: int, workers: int,
+                        epochs: int, n_hot: int, s0: int = 42,
+                        worker: int = 0,
+                        fanouts: Sequence[int] = (25, 10),
+                        partition: str = "metis"
+                        ) -> Tuple[int, int, int, int]:
+    """-> (payload_bytes, wire_bytes, cache_bytes, steps) for one worker.
+
+    The lane bound ``k_max`` is the ALL-workers epoch maximum
+    (``epoch_k_max``), as the compiled collective uses -- wire bytes
+    reflect what actually moves, not worker-local padding."""
+    from repro.graph import load_dataset, partition_graph, KHopSampler
+    from repro.core import build_schedule
+    from repro.dist import DeviceView, build_pull_plan, epoch_k_max
+    from repro.dist.gnn_step import _batch_miss
+
+    g = load_dataset(dataset)
+    pg = partition_graph(g, workers, partition)
+    sampler = KHopSampler(g, fanouts=list(fanouts),
+                          batch_size=batch_size)
+    ws_all = [build_schedule(sampler, pg, worker=w, s0=s0,
+                             num_epochs=epochs, n_hot=n_hot)
+              for w in range(workers)]
+    dv = DeviceView.build(pg)
+    row = g.feat_dim * g.features.itemsize
+    payload = wire = cache = steps = 0
+    for e in range(epochs):
+        es_list = [ws.epoch(e) for ws in ws_all]
+        caches = [dv.remap_cache(es.cache_ids) for es in es_list]
+        cache += es_list[worker].cache_ids.shape[0] * row   # VectorPull
+        k_max = epoch_k_max(es_list, caches, dv)
+        for b in es_list[worker].batches:
+            dev, miss = _batch_miss(b, caches[worker], dv, worker)
+            plan = build_pull_plan(dev[miss].astype(np.int32),
+                                   np.flatnonzero(miss).astype(np.int32),
+                                   dv.owner_d, pg.num_parts, k_max)
+            payload += plan.payload_bytes(row)
+            wire += plan.wire_bytes(row)
+            steps += 1
+    return payload, wire, cache, steps

@@ -1,0 +1,180 @@
+"""Headline-ratio derivation + the ``BENCH_paper.json`` schema.
+
+Mapping to the paper (see DESIGN.md §7):
+
+  * ``throughput_speedup``   -> Table 2 (2.46-3.00x end-to-end);
+                                baseline step time / rapid step time,
+                                both warm (epoch 0 excluded).
+  * ``fetch_reduction_x``    -> §5.3 headline (9.70-15.39x fewer remote
+                                fetches); baseline fetched rows / rapid
+                                residual-miss rows.
+  * ``bytes_reduction_x``    -> Fig. 4 (mean data per step); includes
+                                rapid's off-critical-path VectorPull
+                                staging bytes, so the cache is charged
+                                for its own fills.
+  * ``energy``               -> Table 3 (44 % CPU / 32 % GPU savings);
+                                modelled E = P_mean x warm duration with
+                                the paper's measured power envelopes.
+
+Ratios are derived per (backend, grid-scenario) pair of cells -- rapid
+vs each baseline system of that grid point. dgl-random and gcn run a
+DIFFERENT schedule by definition (random partition / 50,50 fanouts,
+recorded per pair as ``baseline_partition``/``baseline_fanouts``);
+schedule-identical comparison is the differential layer's domain
+(``repro.eval.differential``, keyed by ``CellSpec.scenario_key``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+from repro.eval.cells import CellResult
+from repro.eval.differential import CheckResult, all_pass
+
+SCHEMA = "rapidgnn.bench_paper/v1"
+
+#: the paper's headline claims, pinned so readers of the artifact can
+#: compare without the PDF (ranges are across its dataset grid).
+PAPER_TARGETS = {
+    "throughput_speedup": [2.46, 3.00],
+    "fetch_reduction_x": [9.70, 15.39],
+    "cpu_energy_saving": 0.44,
+    "gpu_energy_saving": 0.32,
+}
+
+_REQUIRED_CELL_FIELDS = (
+    "spec", "feat_dim", "num_steps", "warm_steps", "wall_time_s",
+    "warm_wall_s", "step_time_ms", "rpc_count", "remote_bytes",
+    "vector_pull_bytes", "payload_bytes", "miss_matrix", "losses",
+    "energy", "hit_rate")
+_REQUIRED_PAIR_FIELDS = (
+    "backend", "baseline_system", "scenario", "throughput_speedup",
+    "fetch_reduction_x", "bytes_reduction_x", "energy")
+
+
+def _scenario_dict(c: CellResult) -> Dict:
+    s = c.spec
+    return {k: s[k] for k in ("dataset", "batch_size", "workers",
+                              "n_hot", "epochs", "seed", "fanouts",
+                              "partition")}
+
+
+def derive_pair(rapid: CellResult, base: CellResult) -> Dict:
+    """Headline ratios for one rapid-vs-baseline cell pair.
+
+    Ratio pairing is GRID-level (paper Table 2 compares systems, not
+    schedules): dgl-random and gcn intentionally run a different
+    partition / fanouts, recorded as ``baseline_partition`` /
+    ``baseline_fanouts`` so the scenario block (the rapid cell's
+    schedule) is never read as shared. Schedule-identical pairing is
+    the differential layer's job (``CellSpec.scenario_key``)."""
+    from repro.eval.spec import CellSpec
+
+    r_bytes = rapid.remote_bytes + rapid.vector_pull_bytes
+    b_bytes = base.remote_bytes + base.vector_pull_bytes
+    er, eb = rapid.energy, base.energy
+    bspec = CellSpec.from_dict(base.spec)
+    return {
+        "backend": rapid.backend,
+        "baseline_system": base.system,
+        "baseline_partition": bspec.partition_method,
+        "baseline_fanouts": list(bspec.effective_fanouts),
+        "scenario": _scenario_dict(rapid),
+        "throughput_speedup": round(
+            base.step_time_ms / max(rapid.step_time_ms, 1e-9), 4),
+        "fetch_reduction_x": round(
+            base.rpc_count / max(rapid.rpc_count, 1), 4),
+        "bytes_reduction_x": round(b_bytes / max(r_bytes, 1), 4),
+        "net_time_speedup": round(
+            base.warm_sync_net_time_s /
+            max(rapid.warm_sync_net_time_s, 1e-9), 4)
+        if base.warm_sync_net_time_s else None,
+        "energy": {
+            "cpu_ratio": round(er["cpu_J"] / max(eb["cpu_J"], 1e-9), 4),
+            "gpu_ratio": round(er["gpu_J"] / max(eb["gpu_J"], 1e-9), 4),
+            "total_ratio": round(
+                er["total_J"] / max(eb["total_J"], 1e-9), 4),
+            "cpu_saving": round(
+                1.0 - er["cpu_J"] / max(eb["cpu_J"], 1e-9), 4),
+            "gpu_saving": round(
+                1.0 - er["gpu_J"] / max(eb["gpu_J"], 1e-9), 4),
+        },
+    }
+
+
+def derive_pairs(cells: Sequence[CellResult]) -> List[Dict]:
+    groups: Dict[tuple, Dict[str, CellResult]] = {}
+    for c in cells:
+        s = c.spec
+        key = (c.backend, s["dataset"], s["batch_size"], s["workers"],
+               s["n_hot"], s["epochs"], s["seed"], tuple(s["fanouts"]),
+               s["partition"])
+        groups.setdefault(key, {})[c.system] = c
+    out = []
+    for _, group in sorted(groups.items(), key=lambda kv: str(kv[0])):
+        rapid = group.get("rapidgnn")
+        if rapid is None:
+            continue
+        for sysname in sorted(group):
+            if sysname != "rapidgnn":
+                out.append(derive_pair(rapid, group[sysname]))
+    return out
+
+
+def build_report(campaign: str, cells: Sequence[CellResult],
+                 checks: Sequence[CheckResult]) -> Dict:
+    return {
+        "schema": SCHEMA,
+        "campaign": campaign,
+        "created_unix": time.time(),
+        "paper_targets": PAPER_TARGETS,
+        "num_cells": len(cells),
+        "cells": [c.to_dict() for c in cells],
+        "pairs": derive_pairs(cells),
+        "differential": [c.to_dict() for c in checks],
+        "all_checks_pass": all_pass(checks),
+    }
+
+
+def write_report(report: Dict, path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return path
+
+
+def validate_report(report: Dict) -> List[str]:
+    """Schema check for BENCH_paper.json; returns a list of problems
+    (empty == valid). Used by tests and by CI before upload."""
+    probs: List[str] = []
+    for key in ("schema", "campaign", "paper_targets", "num_cells",
+                "cells", "pairs", "differential", "all_checks_pass"):
+        if key not in report:
+            probs.append(f"missing top-level key {key!r}")
+    if probs:
+        return probs
+    if report["schema"] != SCHEMA:
+        probs.append(f"schema {report['schema']!r} != {SCHEMA!r}")
+    if report["num_cells"] != len(report["cells"]):
+        probs.append("num_cells does not match len(cells)")
+    for i, cell in enumerate(report["cells"]):
+        for f in _REQUIRED_CELL_FIELDS:
+            if f not in cell:
+                probs.append(f"cells[{i}] missing {f!r}")
+    if not report["pairs"]:
+        probs.append("no rapid-vs-baseline pairs derived")
+    for i, pair in enumerate(report["pairs"]):
+        for f in _REQUIRED_PAIR_FIELDS:
+            if f not in pair:
+                probs.append(f"pairs[{i}] missing {f!r}")
+        en = pair.get("energy", {})
+        for f in ("cpu_ratio", "gpu_ratio", "total_ratio"):
+            if f not in en:
+                probs.append(f"pairs[{i}].energy missing {f!r}")
+    for i, chk in enumerate(report["differential"]):
+        if chk.get("status") not in ("PASS", "FAIL", "SKIP"):
+            probs.append(f"differential[{i}] bad status "
+                         f"{chk.get('status')!r}")
+    return probs

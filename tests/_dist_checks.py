@@ -187,6 +187,88 @@ def check_uneven_workers():
     print("uneven_workers OK")
 
 
+def check_determinism():
+    """Same seed => bit-identical staged pull plans, cache ids, and loss
+    curves across two COMPLETELY FRESH device-runner builds (graph,
+    schedules, DeviceView, mesh, runner all rebuilt) -- the device half
+    of the end-to-end determinism property (host half:
+    tests/test_eval_campaign.py)."""
+    from repro.dist import DeviceRapidGNNRunner
+
+    B, epochs = 16, 2
+    runs = []
+    for _ in range(2):
+        g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs)
+        runner = _make_runner(DeviceRapidGNNRunner, g, schedules, dv,
+                              mesh, B)
+        staged0 = runner._stage(0)
+        reports = runner.run()
+        cids = [ws.epoch(e).cache_ids.copy()
+                for ws in schedules for e in range(epochs)]
+        runs.append((staged0, reports, cids))
+    (sa, ra, ca), (sb, rb, cb) = runs
+    for x, y in zip(ca, cb):
+        np.testing.assert_array_equal(x, y)
+    for key in ("send_ids", "send_pos", "send_mask", "input_nodes",
+                "labels", "seed_mask"):
+        np.testing.assert_array_equal(np.asarray(sa["batches"][key]),
+                                      np.asarray(sb["batches"][key]),
+                                      err_msg=key)
+    np.testing.assert_array_equal(np.asarray(sa["cids"]),
+                                  np.asarray(sb["cids"]))
+    np.testing.assert_array_equal(
+        np.concatenate([r.losses for r in ra]),
+        np.concatenate([r.losses for r in rb]))
+    np.testing.assert_array_equal(np.stack([r.miss_lanes for r in ra]),
+                                  np.stack([r.miss_lanes for r in rb]))
+    print("determinism OK")
+
+
+def check_checkpoint_resume():
+    """train/checkpoint.py round trip THROUGH the device runner: run
+    epochs [0, 2), save params+opt state at the boundary, restore into a
+    FRESH runner, run [2, 3) -- the stitched loss curve must equal an
+    uninterrupted 3-epoch run's exactly (float32 survives the npz round
+    trip losslessly; the epoch window shares the one compiled program)."""
+    import tempfile
+
+    from repro.dist import DeviceRapidGNNRunner
+    from repro.models.gnn import init_params
+    from repro.train import (save_checkpoint, load_checkpoint,
+                             checkpoint_step)
+
+    B, epochs = 16, 3
+    g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs)
+    full = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    rep_full = full.run()
+
+    r1 = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    rep_head = r1.run(stop_epoch=2)
+    assert len(rep_head) == 2
+    r2 = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    with tempfile.TemporaryDirectory() as td:
+        pdir = os.path.join(td, "params")
+        odir = os.path.join(td, "opt")
+        save_checkpoint(pdir, r1.params, step=2)
+        save_checkpoint(odir, r1.opt_state, step=2)
+        assert checkpoint_step(pdir) == 2
+        like_p = init_params(r2.cfg, jax.random.key(r2.seed))
+        params = load_checkpoint(pdir, like_p)
+        opt_state = load_checkpoint(odir, r2.opt.init(like_p))
+    rep_tail = r2.run(params=params, opt_state=opt_state, start_epoch=2)
+    assert len(rep_tail) == 1 and rep_tail[0].epoch == 2
+    resumed = np.concatenate([r.losses for r in rep_head + rep_tail])
+    uninterrupted = np.concatenate([r.losses for r in rep_full])
+    np.testing.assert_array_equal(
+        resumed, uninterrupted,
+        err_msg="resumed loss curve diverges from uninterrupted run")
+    # miss accounting unaffected by the restart
+    np.testing.assert_array_equal(
+        np.stack([r.miss_lanes for r in rep_head + rep_tail]),
+        np.stack([r.miss_lanes for r in rep_full]))
+    print("checkpoint_resume OK")
+
+
 def check_moe_expert_parallel():
     from repro.dist import make_mesh
     from repro.models.transformer.common import ArchConfig
@@ -230,6 +312,8 @@ if __name__ == "__main__":
               "epoch": check_pipelined_gnn_epoch,
               "runner": check_device_runner,
               "uneven": check_uneven_workers,
+              "determinism": check_determinism,
+              "checkpoint": check_checkpoint_resume,
               "moe": check_moe_expert_parallel,
               "decode": check_sharded_decode_attention}
     if which == "all":

@@ -3,19 +3,31 @@
 When the real ``hypothesis`` package is installed (requirements-dev.txt)
 it is re-exported unchanged. When it is missing -- minimal CI images,
 air-gapped runners -- a deterministic fallback provides just the subset
-the suite uses (``@given`` + ``@settings`` with ``st.integers`` /
-``st.floats``): each property test runs ``max_examples`` times against a
-fixed-seed RNG stream, so the suite still collects and exercises the
-properties everywhere, only with fixed rather than adversarial examples.
+the suite uses (``@given`` + ``@settings`` + ``composite`` with
+``st.integers`` / ``st.floats`` / ``st.booleans`` / ``st.sampled_from``
+/ ``st.just`` / ``st.lists`` / ``st.tuples``): each property test runs
+``max_examples`` times against a fixed-seed RNG stream, so the suite
+still collects and exercises the properties everywhere, only with fixed
+rather than adversarial examples.
+
+``tests/strategies.py`` layers the repo's domain strategies
+(partitioned graphs, uneven worker schedules, cache budgets, assembly
+query mixes, pull-request multisets) on top of this shim.
 """
 from __future__ import annotations
 
 try:
-    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
     from hypothesis import strategies as st  # noqa: F401
+    from hypothesis.strategies import composite  # noqa: F401
     HAVE_HYPOTHESIS = True
+    #: pass as ``settings(..., suppress_health_check=ALL_HEALTH_CHECKS)``
+    #: for properties whose strategies do real work (schedule builders):
+    #: the draw IS the scenario construction, so "too slow" is expected.
+    ALL_HEALTH_CHECKS = list(HealthCheck)
 except ImportError:
     HAVE_HYPOTHESIS = False
+    ALL_HEALTH_CHECKS = ()          # shim ignores the kwarg anyway
 
     import numpy as np
 
@@ -41,7 +53,39 @@ except ImportError:
         def booleans():
             return _Strategy(lambda rng: bool(rng.integers(0, 2)))
 
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(0, len(items)))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def _draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(_draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.draw(rng) for e in elements))
+
     st = _Strategies()
+
+    def composite(fn):
+        """Shim for ``hypothesis.strategies.composite``: the decorated
+        function takes ``draw`` first; calling it (with any extra args)
+        yields a strategy whose draw threads the shared RNG through."""
+        def make(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs))
+        make.__name__ = fn.__name__
+        return make
 
     def given(*strategies):
         def deco(fn):

@@ -1,28 +1,44 @@
-"""Shared uneven-train-partition scenario: worker 2 trains on NOTHING
-(zero batches per epoch), worker 3 on half a batch. Used by both the
-host-side collation tests (tests/test_device_runner.py) and the on-mesh
-subprocess checks (tests/_dist_checks.py) so they cover the identical
-case."""
+"""Shared uneven-train-partition scenario builder.
+
+The DEFAULT arguments reproduce the historical fixed case -- worker 2
+trains on NOTHING (zero batches per epoch), worker 3 on half a batch --
+used by the host-side collation tests (tests/test_device_runner.py) and
+the on-mesh subprocess checks (tests/_dist_checks.py) so they cover the
+identical scenario. ``zero_workers`` / ``partial_workers`` parameterize
+it for the property suite (tests/strategies.py draws them).
+"""
 import dataclasses
 
 
-def build_uneven_case(P_=4, B=16, epochs=2, n_hot=64, s0=7):
-    """-> (graph, partitioned_graph, worker schedules, DeviceView)."""
+def build_uneven_case(P_=4, B=16, epochs=2, n_hot=64, s0=7,
+                      zero_workers=(2,), partial_workers=None):
+    """-> (graph, partitioned_graph, worker schedules, DeviceView).
+
+    ``zero_workers``: partitions whose train nodes are all masked off.
+    ``partial_workers``: {worker: keep_count} -- keep only the first
+    ``keep_count`` train nodes of that partition (default: worker 3
+    keeps half a batch)."""
     from repro.graph import load_dataset, partition_graph, KHopSampler
     from repro.core import build_schedule
     from repro.dist import DeviceView
 
+    if partial_workers is None:
+        partial_workers = {3: B // 2}
     g = load_dataset("tiny")
     # load_dataset caches: replace the graph before editing train_mask so
     # other tests sharing the cached instance stay unaffected
     g = dataclasses.replace(g, train_mask=g.train_mask.copy())
     pg = partition_graph(g, P_, "greedy")
     tm = g.train_mask.copy()
-    tm[pg.local_nodes[2]] = False
-    l3 = pg.local_nodes[3]
-    keep = l3[tm[l3]][: B // 2]
-    tm[l3] = False
-    tm[keep] = True
+    for w in zero_workers:
+        tm[pg.local_nodes[w]] = False
+    for w, keep_n in partial_workers.items():
+        if w in zero_workers:
+            continue
+        lw = pg.local_nodes[w]
+        keep = lw[tm[lw]][:keep_n]
+        tm[lw] = False
+        tm[keep] = True
     g.train_mask = tm
     sampler = KHopSampler(g, fanouts=[5, 5], batch_size=B)
     schedules = [build_schedule(sampler, pg, worker=w, s0=s0,

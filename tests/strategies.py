@@ -1,0 +1,177 @@
+"""Shared hypothesis strategies for the property suites, layered on the
+``tests/_hyp.py`` shim (they run under real hypothesis when installed
+and under the deterministic fallback otherwise).
+
+Domain strategies:
+
+  * ``cache_budgets``        -- n_hot values incl. the 0 / 1 boundaries
+  * ``uneven_worker_cases``  -- partitioned tiny graph + per-worker
+                                schedules with drawn zero/partial-train
+                                workers (generalizes the fixed scenario
+                                in tests/_uneven.py)
+  * ``assemble_cases``       -- (table, base, cache, query, pulled)
+                                tuples for the fused-assembly parity
+                                suite, over drawn query mixes + shapes
+  * ``pull_request_sets``    -- grouped pull requests with duplicates
+                                and padding ids for the lane packer
+  * ``plan_round_trips``     -- (P, n_per, d, m, seed) shapes for the
+                                pull-plan owner/slot round trip
+
+plus ``build_assemble_case`` as a plain deterministic builder the
+non-property regression tests anchor on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from _hyp import st, composite
+from _uneven import build_uneven_case
+
+CACHE_PAD32 = np.int32(2 ** 31 - 1)
+
+ASSEMBLE_KINDS = ("mixed", "all_hit", "all_miss", "all_local", "padded")
+
+
+# ---------------------------------------------------------------------------
+# scalar strategies
+# ---------------------------------------------------------------------------
+
+@composite
+def cache_budgets(draw, hi=256):
+    """Cache sizes with the degenerate boundaries (0: cache disabled /
+    empty C_s; 1: single hot row) drawn often."""
+    if draw(st.booleans()):
+        return draw(st.sampled_from([0, 1, hi]))
+    return draw(st.integers(2, hi))
+
+
+@composite
+def seeds(draw):
+    return draw(st.integers(0, 2 ** 31 - 1))
+
+
+# ---------------------------------------------------------------------------
+# schedules over partitioned graphs
+# ---------------------------------------------------------------------------
+
+@composite
+def uneven_worker_cases(draw, epochs=2):
+    """-> (graph, pg, schedules, DeviceView): a 4-way partitioned tiny
+    graph whose per-worker train sets are drawn -- possibly empty,
+    possibly a fraction of a batch -- exercising every padding path of
+    the epoch collation (zero-batch workers, short workers, ragged
+    final batches)."""
+    B = draw(st.integers(8, 24))
+    n_hot = draw(cache_budgets(hi=128))
+    s0 = draw(st.integers(0, 999))
+    zero = draw(st.sampled_from([(), (2,), (0, 2)]))
+    partial = {}
+    if draw(st.booleans()):
+        partial = {3: max(1, B // draw(st.integers(2, 4)))}
+    return build_uneven_case(P_=4, B=B, epochs=epochs, n_hot=n_hot,
+                             s0=s0, zero_workers=zero,
+                             partial_workers=partial)
+
+
+# ---------------------------------------------------------------------------
+# fused-assembly cases
+# ---------------------------------------------------------------------------
+
+def build_assemble_case(kind, rng, P_=4, n_per=32, d=96, n_hot=24, m=48,
+                        worker=1):
+    """Build (table, base, cache_ids, cache_feats, query, pulled) for one
+    named query mix (deterministic given ``rng``). Requires
+    ``n_hot + m <= (P_ - 1) * n_per`` so the miss pool never underflows."""
+    import jax.numpy as jnp
+
+    base = worker * n_per
+    table = rng.normal(size=(n_per, d)).astype(np.float32)
+    local_pool = np.arange(base, base + n_per)
+    remote_pool = np.setdiff1d(np.arange(P_ * n_per), local_pool)
+    cids = np.sort(rng.choice(remote_pool, size=n_hot,
+                              replace=False)).astype(np.int32)
+    cfeats = rng.normal(size=(n_hot, d)).astype(np.float32)
+    miss_pool = np.setdiff1d(remote_pool, cids)
+    if kind == "mixed":
+        q = np.concatenate([rng.choice(local_pool, size=m // 4),
+                            rng.choice(cids, size=m // 4),
+                            rng.choice(miss_pool, size=m // 4,
+                                       replace=False),
+                            np.full(m - 3 * (m // 4), -1)])
+    elif kind == "all_hit":
+        q = rng.choice(cids, size=m)
+    elif kind == "all_miss":
+        q = rng.choice(miss_pool, size=m, replace=False)
+    elif kind == "all_local":
+        q = rng.choice(local_pool, size=m)
+    elif kind == "padded":
+        q = np.concatenate([np.full(m // 2, -1),
+                            np.full(m - m // 2, CACHE_PAD32)])
+    else:
+        raise ValueError(kind)
+    q = q.astype(np.int32)
+    rng.shuffle(q)
+    pulled = np.where((q >= 0) & (q < CACHE_PAD32), 1.0, 0.0)[:, None] \
+        * rng.normal(size=(m, d))
+    return (jnp.asarray(table), jnp.int32(base), jnp.asarray(cids),
+            jnp.asarray(cfeats), jnp.asarray(q),
+            jnp.asarray(pulled.astype(np.float32)))
+
+
+@composite
+def assemble_cases(draw):
+    """Drawn query mix AND drawn shapes (deliberately unrelated to any
+    kernel tile size, so internal padding is always exercised)."""
+    kind = draw(st.sampled_from(ASSEMBLE_KINDS))
+    n_per = draw(st.integers(16, 48))
+    d = draw(st.integers(3, 160))
+    n_hot = draw(st.integers(1, n_per))          # miss pool >= 2*n_per
+    m = draw(st.integers(8, 2 * n_per))
+    rng = np.random.default_rng(draw(seeds()))
+    return build_assemble_case(kind, rng, P_=4, n_per=n_per, d=d,
+                               n_hot=n_hot, m=m)
+
+
+# ---------------------------------------------------------------------------
+# pull plans / lane packing
+# ---------------------------------------------------------------------------
+
+@composite
+def plan_round_trips(draw):
+    """(P, n_per, d, m, seed): m distinct global ids spread over P
+    owners, positions 0..m-1 -- the owner/slot round-trip shape."""
+    P_ = draw(st.integers(2, 6))
+    n_per = draw(st.integers(4, 40))
+    d = draw(st.integers(1, 16))
+    m = draw(st.integers(1, min(P_ * n_per, 48)))
+    return P_, n_per, d, m, draw(seeds())
+
+
+@composite
+def pull_request_sets(draw):
+    """Grouped pull requests with exact duplicates and -1 padding rows:
+    -> (per_group [(ids, pos)...], owner_of, P, k_max). ``k_max`` is
+    sized to the true per-(group, owner) maximum so packing never
+    overflows but often runs exactly full."""
+    P_ = draw(st.integers(1, 5))
+    n_per = draw(st.integers(4, 24))
+    G = draw(st.integers(1, 6))
+    owner_of = np.repeat(np.arange(P_), n_per)
+    rng = np.random.default_rng(draw(seeds()))
+    per_group = []
+    k_need = 1
+    for _ in range(G):
+        n = int(rng.integers(0, 30))
+        gi = rng.integers(-1, P_ * n_per, size=n)     # -1: padding rows
+        gp = rng.integers(0, 64, size=n)
+        if n > 4:                                     # inject exact dupes
+            gi[:2] = gi[2:4]
+            gp[:2] = gp[2:4]
+        valid = gi >= 0
+        if valid.any():
+            uniq = np.unique(np.stack([gi[valid], gp[valid]]), axis=1)
+            counts = np.bincount(owner_of[uniq[0]], minlength=P_)
+            k_need = max(k_need, int(counts.max()))
+        per_group.append((gi, gp))
+    k_max = k_need + int(rng.integers(0, 3))
+    return per_group, owner_of, P_, k_max

@@ -13,7 +13,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _hyp import ALL_HEALTH_CHECKS, given, settings
 from _uneven import build_uneven_case
+from strategies import (ASSEMBLE_KINDS, assemble_cases,
+                        build_assemble_case, pull_request_sets,
+                        uneven_worker_cases)
 from repro.core import merge_pad_bounds
 from repro.dist import (empty_caches, epoch_k_max, collate_device_epoch,
                         collate_device_epoch_loop, pack_pull_lanes,
@@ -23,53 +27,34 @@ from repro.models.gnn import GNNConfig, init_params, loss_fn
 
 CACHE_PAD32 = np.int32(2 ** 31 - 1)
 
+_case = build_assemble_case         # shared builder (tests/strategies.py)
+
 
 # ---------------------------------------------------------------------------
 # fused assemble: three backends, bit-exact
 # ---------------------------------------------------------------------------
 
-def _case(kind, rng, P_=4, n_per=32, d=96, n_hot=24, m=48, worker=1):
-    """Build (table, base, cache_ids, cache_feats, query, pulled) for one
-    named query mix."""
-    base = worker * n_per
-    table = rng.normal(size=(n_per, d)).astype(np.float32)
-    local_pool = np.arange(base, base + n_per)
-    remote_pool = np.setdiff1d(np.arange(P_ * n_per), local_pool)
-    cids = np.sort(rng.choice(remote_pool, size=n_hot,
-                              replace=False)).astype(np.int32)
-    cfeats = rng.normal(size=(n_hot, d)).astype(np.float32)
-    miss_pool = np.setdiff1d(remote_pool, cids)
-    if kind == "mixed":
-        q = np.concatenate([rng.choice(local_pool, size=m // 4),
-                            rng.choice(cids, size=m // 4),
-                            rng.choice(miss_pool, size=m // 4,
-                                       replace=False),
-                            np.full(m - 3 * (m // 4), -1)])
-    elif kind == "all_hit":
-        q = rng.choice(cids, size=m)
-    elif kind == "all_miss":
-        q = rng.choice(miss_pool, size=m, replace=False)
-    elif kind == "all_local":
-        q = rng.choice(local_pool, size=m)
-    elif kind == "padded":
-        q = np.concatenate([np.full(m // 2, -1),
-                            np.full(m - m // 2, CACHE_PAD32)])
-    else:
-        raise ValueError(kind)
-    q = q.astype(np.int32)
-    rng.shuffle(q)
-    pulled = np.where((q >= 0) & (q < CACHE_PAD32), 1.0, 0.0)[:, None] \
-        * rng.normal(size=(m, d))
-    return (jnp.asarray(table), jnp.int32(base), jnp.asarray(cids),
-            jnp.asarray(cfeats), jnp.asarray(q),
-            jnp.asarray(pulled.astype(np.float32)))
-
-
-@pytest.mark.parametrize("kind", ["mixed", "all_hit", "all_miss",
-                                  "all_local", "padded"])
+@pytest.mark.parametrize("kind", list(ASSEMBLE_KINDS))
 def test_assemble_backends_exact_equal(kind):
     rng = np.random.default_rng(hash(kind) % 2 ** 31)
     args = _case(kind, rng)
+    staged = np.asarray(assemble_features(*args, backend="staged",
+                                          interpret=True))
+    ref = np.asarray(assemble_features(*args, backend="ref"))
+    fused = np.asarray(assemble_features(*args, backend="fused",
+                                         interpret=True))
+    np.testing.assert_array_equal(ref, staged)
+    np.testing.assert_array_equal(fused, staged)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(assemble_cases())
+def test_assemble_backends_property(args):
+    """Backend parity over DRAWN query mixes and shapes (m/n_hot/d with
+    no relation to the kernel tile sizes): the single-pass jnp oracle
+    and the fused kernel must reproduce the staged chain bit-exactly on
+    every drawn case."""
     staged = np.asarray(assemble_features(*args, backend="staged",
                                           interpret=True))
     ref = np.asarray(assemble_features(*args, backend="ref"))
@@ -290,6 +275,32 @@ def test_classify_fallback_matches_stamp_table(sched_case, monkeypatch):
     assert want_miss.any()
 
 
+@settings(max_examples=3, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(uneven_worker_cases())
+def test_vectorized_collation_property_on_drawn_schedules(case):
+    """Vectorized == loop collation on DRAWN uneven schedules: random
+    batch sizes, cache budgets (incl. 0), seeds, and zero/partial-train
+    workers (tests/strategies.py) -- both epochs, hot and empty caches."""
+    g, pg, schedules, dv = case
+    m_max, edge_max = merge_pad_bounds(schedules)
+    for epoch in range(2):
+        es_list = [ws.epoch(epoch) for ws in schedules]
+        B = max(1, max((b.seeds.shape[0] for es in es_list
+                        for b in es.batches), default=1))
+        for caches in (empty_caches(4, g.feat_dim),
+                       [dv.remap_cache(es.cache_ids) for es in es_list]):
+            k_max = epoch_k_max(es_list, caches, dv)
+            S = max(es.num_batches for es in es_list)
+            if S == 0:      # every worker drawn empty: nothing to pad
+                continue
+            args = (es_list, caches, dv, g.labels, B, m_max, edge_max,
+                    k_max, S)
+            _assert_epochs_equal(collate_device_epoch(*args),
+                                 collate_device_epoch_loop(*args),
+                                 len(edge_max))
+
+
 def test_vectorized_collation_rejects_truncation(sched_case):
     g, pg, schedules, dv = sched_case
     m_max, edge_max = merge_pad_bounds(schedules)
@@ -301,28 +312,22 @@ def test_vectorized_collation_rejects_truncation(sched_case):
                              edge_max, 10_000, S - 1)
 
 
-def test_pack_pull_lanes_matches_per_group_build_pull_plan():
-    """The batched lane packer vs one build_pull_plan per group on
-    random requests with duplicates and padding ids."""
-    rng = np.random.default_rng(5)
-    P_, n_per, k_max, G = 4, 16, 12, 6
-    owner_of = np.repeat(np.arange(P_), n_per)
-    ids, pos, grp = [], [], []
-    per_group = []
-    for gidx in range(G):
-        n = int(rng.integers(0, 30))
-        gi = rng.integers(-1, P_ * n_per, size=n)   # -1: padding rows
-        gp = rng.integers(0, 64, size=n)
-        if n > 4:                                   # inject exact dupes
-            gi[:2] = gi[2:4]
-            gp[:2] = gp[2:4]
-        per_group.append((gi, gp))
-        ids.append(gi)
-        pos.append(gp)
-        grp.append(np.full(n, gidx))
-    ids = np.concatenate(ids)
-    pos = np.concatenate(pos)
-    grp = np.concatenate(grp)
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(pull_request_sets())
+def test_pack_pull_lanes_matches_per_group_build_pull_plan(case):
+    """The batched lane packer vs one build_pull_plan per group on DRAWN
+    requests with duplicates and padding ids (k_max sized to run exactly
+    full on some draws)."""
+    per_group, owner_of, P_, k_max = case
+    G = len(per_group)
+    ids = np.concatenate([gi for gi, _ in per_group]) \
+        if per_group else np.zeros(0, np.int64)
+    pos = np.concatenate([gp for _, gp in per_group]) \
+        if per_group else np.zeros(0, np.int64)
+    grp = np.concatenate([np.full(gi.shape[0], gidx)
+                          for gidx, (gi, _) in enumerate(per_group)]) \
+        if per_group else np.zeros(0, np.int64)
     valid = ids >= 0
     sids, spos, smask, counts = pack_pull_lanes(
         ids[valid], pos[valid], grp[valid], owner_of[ids[valid]],

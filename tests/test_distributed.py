@@ -44,6 +44,18 @@ def test_device_runner_uneven_workers():
     assert "uneven_workers OK" in _run("uneven")
 
 
+def test_device_runner_end_to_end_determinism():
+    """Same seed => bit-identical staged pull plans, cache ids, and loss
+    curves across two fresh device-runner builds."""
+    assert "determinism OK" in _run("determinism")
+
+
+def test_checkpoint_resume_through_device_runner():
+    """Save at an epoch boundary mid-campaign, restore into a fresh
+    runner, resumed loss curve == uninterrupted run."""
+    assert "checkpoint_resume OK" in _run("checkpoint")
+
+
 def test_moe_expert_parallel_matches_single_device():
     assert "moe_expert_parallel OK" in _run("moe")
 

@@ -1,10 +1,13 @@
 """Single-device tests for the pull-plan wire format (no subprocess, no
 mesh): build_pull_plan's packing is pure numpy, so its id->(owner, slot)
 round trip, dedupe, and overflow contract are checked by simulating the
-exchange host-side (DESIGN.md §6.2)."""
+exchange host-side (DESIGN.md §6.2). The round trip is a PROPERTY over
+drawn shapes (tests/strategies.py)."""
 import numpy as np
 import pytest
 
+from _hyp import ALL_HEALTH_CHECKS, given, settings
+from strategies import plan_round_trips
 from repro.dist import build_pull_plan
 from repro.dist.gnn_step import DeviceView
 from repro.graph import load_dataset, partition_graph
@@ -20,9 +23,14 @@ def _simulate_exchange(plan, table, offsets, m_max, d):
     return out
 
 
-def test_round_trip_owner_slot():
-    rng = np.random.default_rng(0)
-    P_, n_per, d, m = 4, 32, 8, 20
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(plan_round_trips())
+def test_round_trip_owner_slot(case):
+    """For ANY (P, n_per, d, m): every id lands in its owner's lane and
+    the replayed exchange reproduces a direct gather."""
+    P_, n_per, d, m, seed = case
+    rng = np.random.default_rng(seed)
     table = rng.normal(size=(P_, n_per, d)).astype(np.float32)
     owner = np.repeat(np.arange(P_), n_per)
     offsets = np.arange(P_) * n_per
