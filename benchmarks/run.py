@@ -65,7 +65,8 @@ def main() -> None:
 
     from benchmarks import (speedup, access_dist, comm_volume, cache_sweep,
                             scaling, memory, energy, convergence,
-                            embedding_cache, device_epoch, assemble)
+                            embedding_cache, device_epoch, assemble,
+                            schedule_build)
 
     if args.full:
         ds = ("reddit_sim", "ogbn_products_sim", "ogbn_papers_sim")
@@ -151,6 +152,10 @@ def main() -> None:
     _section("device_epoch", _device_epoch,
              lambda rows: rows[-1] if rows else "-")
     _section("assemble_collation", assemble.run,
+             lambda rows: rows[-1] if rows else "-")
+    # raises (-> section FAILED -> CI bench job fails) on any
+    # batched-vs-loop schedule parity mismatch, campaign-style
+    _section("schedule_build", schedule_build.run,
              lambda rows: rows[-1] if rows else "-")
     if not args.skip_roofline:
         from benchmarks import roofline

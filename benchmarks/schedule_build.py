@@ -1,0 +1,171 @@
+"""Microbenchmark: the vectorized epoch-at-once schedule compiler vs the
+per-batch oracle (ISSUE 5 / DESIGN.md §2.1).
+
+Two sections, each at a 64- and a 256-worker partition point:
+
+  * sampler -- ``KHopSampler.sample_epoch_batched`` vs the per-batch
+    ``sample_epoch`` loop, asserting bit-exact batch parity before any
+    timing.
+  * build   -- one end-to-end worker-epoch build (sampling + remote
+    frequency counting + deterministic hot-set selection; the loop
+    variant additionally pays ``FlatEpoch.from_batches`` packing, which
+    IS its pipeline -- the canonical schedule payload is flat).
+
+Per-worker train mass follows the assemble-bench convention of
+paper-proportioned shapes: ogbn-papers100M has ~1.2 M train nodes, so a
+P-worker cluster hands each worker ~1.2M/P seeds (capped at
+``MAX_TRAIN`` to keep the loop reference affordable; the sim partitions
+themselves are far smaller than papers100M's, so the seed stream is
+drawn graph-wide -- schedule-build cost depends on the stream size and
+the graph, not on who owns the seeds). Loop/batched iterations are
+INTERLEAVED and min-of-N so machine drift cancels out of the ratio.
+
+Emits ``artifacts/BENCH_schedule.json`` and CSV rows for
+``benchmarks.run``; any batched-vs-loop divergence raises
+``RuntimeError("... parity FAILED")``, which fails the section and the
+CI bench job (same pattern as the campaign section).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HEADER = "section,case,variant,ms_per_worker_epoch,speedup_vs_loop,identical"
+
+#: workers sampled per partition point (timing every one of 256 loop
+#: builds would dominate the bench job for no extra signal)
+SAMPLE_WORKERS = 3
+#: papers100M train mass and the per-worker cap keeping the loop
+#: reference affordable
+PAPER_TRAIN, MAX_TRAIN = 1_200_000, 2_400
+
+
+def _time_pair(fn_a, fn_b, iters: int = 5):
+    """Interleaved min-of-iters (ms, ms): A/B alternate call-for-call so
+    scheduler/thermal drift hits both variants equally."""
+    fn_a()
+    fn_b()
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e3, min(tb) * 1e3
+
+
+def _batches_equal(flat, loop_batches) -> bool:
+    if flat.num_batches != len(loop_batches):
+        return False
+    for br, bn in zip(loop_batches, flat.to_batches()):
+        if not (np.array_equal(br.seeds, bn.seeds)
+                and np.array_equal(br.input_nodes, bn.input_nodes)):
+            return False
+        for x, y in zip(br.blocks, bn.blocks):
+            if not ((x.num_src, x.num_dst) == (y.num_src, y.num_dst)
+                    and np.array_equal(x.edge_src, y.edge_src)
+                    and np.array_equal(x.edge_dst, y.edge_dst)
+                    and np.array_equal(x.edge_mask, y.edge_mask)):
+                return False
+    return True
+
+
+def _epochs_equal(a, b) -> bool:
+    return (a.m_max == b.m_max
+            and np.array_equal(a.remote_ids, b.remote_ids)
+            and np.array_equal(a.remote_freq, b.remote_freq)
+            and np.array_equal(a.cache_ids, b.cache_ids)
+            and np.array_equal(a.flat.input_nodes, b.flat.input_nodes)
+            and np.array_equal(a.flat.seeds, b.flat.seeds))
+
+
+def bench_schedule_build(workers=(64, 256),
+                         dataset: str = "ogbn_products_sim",
+                         batch_size: int = 100, fanouts=(25, 10),
+                         n_hot: int = 4096, s0: int = 42):
+    from repro.graph import load_dataset, partition_graph, KHopSampler
+    from repro.core.schedule import _build_epoch
+
+    g = load_dataset(dataset)
+    rng = np.random.default_rng(s0)
+    rows, recs = [], []
+    for P_ in workers:
+        pg = partition_graph(g, P_, "metis")
+        sampler = KHopSampler(g, fanouts=list(fanouts),
+                              batch_size=batch_size)
+        n_train = min(PAPER_TRAIN // P_, MAX_TRAIN)
+        t_samp = {"loop": 0.0, "batched": 0.0}
+        t_build = {"loop": 0.0, "batched": 0.0}
+        parity = True
+        for w in range(SAMPLE_WORKERS):
+            train = rng.choice(g.num_nodes, size=n_train, replace=False)
+            parity &= _batches_equal(
+                sampler.sample_epoch_batched(s0, w, 0, train),
+                sampler.sample_epoch(s0, w, 0, train))
+            parity &= _epochs_equal(
+                _build_epoch(sampler, pg, w, s0, 0, train, n_hot,
+                             compiler="loop"),
+                _build_epoch(sampler, pg, w, s0, 0, train, n_hot,
+                             compiler="batched"))
+            tl, tb = _time_pair(
+                lambda: sampler.sample_epoch(s0, w, 0, train),
+                lambda: sampler.sample_epoch_batched(s0, w, 0, train))
+            t_samp["loop"] += tl
+            t_samp["batched"] += tb
+            tl, tb = _time_pair(
+                lambda: _build_epoch(sampler, pg, w, s0, 0, train,
+                                     n_hot, compiler="loop"),
+                lambda: _build_epoch(sampler, pg, w, s0, 0, train,
+                                     n_hot, compiler="batched"))
+            t_build["loop"] += tl
+            t_build["batched"] += tb
+        rec = {"workers": P_, "dataset": dataset,
+               "batch_size": batch_size, "fanouts": list(fanouts),
+               "train_per_worker": n_train,
+               "batches_per_worker": -(-n_train // batch_size),
+               "parity": bool(parity)}
+        for sec, t in (("sampler", t_samp), ("build", t_build)):
+            for variant in ("loop", "batched"):
+                ms = t[variant] / SAMPLE_WORKERS
+                sp = t["loop"] / max(t[variant], 1e-9)
+                rows.append(f"{sec},P{P_}_b{batch_size}_n{n_train},"
+                            f"{variant},{ms:.2f},{sp:.2f}x,{parity}")
+                rec[f"{sec}_{variant}_ms"] = round(ms, 3)
+            rec[f"{sec}_speedup"] = round(
+                t["loop"] / max(t["batched"], 1e-9), 2)
+        recs.append(rec)
+    return rows, recs
+
+
+def run() -> List[str]:
+    rows = [HEADER]
+    b_rows, recs = bench_schedule_build()
+    rows += b_rows
+    art = os.path.join(ROOT, "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "BENCH_schedule.json"), "w") as f:
+        json.dump({"schedule_build": recs}, f, indent=1)
+    if not all(r["parity"] for r in recs):
+        raise RuntimeError("batched-vs-loop schedule parity FAILED")
+    best = max(recs, key=lambda r: r["workers"])
+    rows.append(f"summary,build_P{best['workers']},batched,"
+                f"{best['build_batched_ms']},{best['build_speedup']}x,"
+                f"{best['parity']}")
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """RapidGNN core: deterministic schedule, hot-set cache, prefetch pipeline."""
 from repro.core.schedule import (build_schedule, WorkerSchedule,
                                  EpochSchedule, CollatedBatch, collate,
-                                 epoch_edge_maxima, merge_pad_bounds)
+                                 epoch_edge_maxima, merge_pad_bounds,
+                                 select_hot_set)
 from repro.core.cache import FeatureCache, DoubleBufferCache
 from repro.core.fetch import ShardedFeatureStore
 from repro.core.prefetch import Prefetcher, SecondaryCacheBuilder, assemble_features
@@ -11,7 +12,8 @@ from repro.core.metrics import (EpochMetrics, RunMetrics, NetworkModel,
 
 __all__ = [
     "build_schedule", "WorkerSchedule", "EpochSchedule", "CollatedBatch",
-    "collate", "epoch_edge_maxima", "merge_pad_bounds", "FeatureCache",
+    "collate", "epoch_edge_maxima", "merge_pad_bounds", "select_hot_set",
+    "FeatureCache",
     "DoubleBufferCache",
     "ShardedFeatureStore", "Prefetcher", "SecondaryCacheBuilder",
     "assemble_features", "RapidGNNRunner", "BaselineRunner",

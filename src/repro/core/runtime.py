@@ -28,7 +28,7 @@ def global_pad_bounds(ws: WorkerSchedule):
     """Static shapes across ALL epochs -> one XLA compilation.
 
     Served from the schedule's build-time (m_max, edge_maxima) metadata
-    cache, so spilled epochs are never re-unpickled for pad bounds."""
+    cache, so spilled epochs are never re-loaded for pad bounds."""
     return ws.pad_bounds()
 
 

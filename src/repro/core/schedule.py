@@ -2,40 +2,126 @@
 
 Precomputes, per worker, the full deterministic training schedule:
   * every epoch's batch metadata  {B_e}  (ids / offsets / locality only),
+    compiled whole-epoch by ``KHopSampler.sample_epoch_batched`` into a
+    packed ``FlatEpoch`` (DESIGN.md §2.1; the per-batch ``sample_epoch``
+    loop survives as the parity oracle, ``compiler="loop"``),
   * the access union  N = U_e U_i N_i^e  and  N_remote = N \\ N_local,
   * per-epoch remote access frequencies  freq(.)  over {B_e},
-  * the hot set  N_cache = top-n_hot of N_remote by freq  (per epoch, so
-    the double buffer C_sec for e+1 can differ from C_s for e),
+  * the hot set  N_cache = top-n_hot of N_remote by (freq desc, id asc)
+    -- the DETERMINISTIC tie-break Prop 3.1 needs -- (per epoch, so the
+    double buffer C_sec for e+1 can differ from C_s for e),
   * padding bounds  m_max  and per-layer edge maxima (XLA static shapes).
 
 Like the paper's SSD streaming, epochs can be spilled to disk
-(``spill_dir``) so precompute memory stays bounded on huge runs.
+(``spill_dir``): the FlatEpoch arrays go straight into one ``np.savez``
+file per (worker, epoch) -- flat ndarray blocks, no pickled object
+graph -- so spills are smaller and reload without per-batch
+reconstruction.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-import pickle
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.graph.partition import PartitionedGraph
-from repro.graph.sampler import KHopSampler, SampledBatch
+from repro.graph.sampler import FlatEpoch, KHopSampler, SampledBatch
 
 
-@dataclasses.dataclass
 class EpochSchedule:
-    epoch: int
-    batches: List[SampledBatch]
-    remote_ids: np.ndarray        # unique remote node ids accessed in epoch
-    remote_freq: np.ndarray       # access counts aligned with remote_ids
-    cache_ids: np.ndarray         # top-n_hot remote ids, SORTED (lookup key)
-    m_max: int                    # max |N_i^e| over the epoch
+    """One worker-epoch of the schedule: packed batches + hot-set
+    metadata.
+
+    The canonical batch payload is ``flat`` (a ``FlatEpoch``: CSR-style
+    whole-epoch arrays, DESIGN.md §2.1); ``batches`` materializes the
+    legacy ``List[SampledBatch]`` form lazily as zero-copy views for
+    the per-batch oracle/compat paths (host-sim runners, loop
+    collation). Constructing from ``batches=`` packs them into a
+    FlatEpoch, so synthetic-schedule builders keep working unchanged.
+    """
+
+    def __init__(self, epoch: int, flat: Optional[FlatEpoch] = None,
+                 batches: Optional[List[SampledBatch]] = None,
+                 remote_ids: Optional[np.ndarray] = None,
+                 remote_freq: Optional[np.ndarray] = None,
+                 cache_ids: Optional[np.ndarray] = None,
+                 m_max: int = 0):
+        if flat is None:
+            if batches is None:
+                raise ValueError("EpochSchedule needs flat= or batches=")
+            worker = batches[0].worker if batches else 0
+            flat = FlatEpoch.from_batches(batches, epoch=epoch,
+                                          worker=worker)
+            self._batches: Optional[List[SampledBatch]] = list(batches)
+        else:
+            self._batches = None
+        self.epoch = epoch
+        self.flat = flat
+        z = np.zeros(0, np.int64)
+        self.remote_ids = remote_ids if remote_ids is not None else z
+        self.remote_freq = remote_freq if remote_freq is not None \
+            else z.copy()
+        self.cache_ids = cache_ids if cache_ids is not None else z.copy()
+        self.m_max = m_max
+
+    @property
+    def batches(self) -> List[SampledBatch]:
+        if self._batches is None:
+            self._batches = self.flat.to_batches()
+        return self._batches
 
     @property
     def num_batches(self) -> int:
-        return len(self.batches)
+        return self.flat.num_batches
+
+
+# ---------------------------------------------------------------------------
+# npz spill format (flat arrays only -- no pickled objects)
+# ---------------------------------------------------------------------------
+
+def spill_path(spill_dir: str, worker: int, e: int) -> str:
+    return os.path.join(spill_dir, f"w{worker}_e{e}.npz")
+
+
+def save_epoch_npz(path: str, es: EpochSchedule) -> None:
+    """Spill one epoch: every FlatEpoch array plus the hot-set metadata
+    as plain ndarray entries (``allow_pickle`` stays off on reload)."""
+    flat = es.flat
+    arrs = {
+        "meta": np.array([es.epoch, flat.worker, es.m_max,
+                          flat.num_layers], np.int64),
+        "seeds": flat.seeds, "seed_starts": flat.seed_starts,
+        "input_nodes": flat.input_nodes,
+        "input_starts": flat.input_starts, "num_dst": flat.num_dst,
+        "remote_ids": es.remote_ids, "remote_freq": es.remote_freq,
+        "cache_ids": es.cache_ids,
+    }
+    for l in range(flat.num_layers):
+        arrs[f"edge_src_{l}"] = flat.edge_src[l]
+        arrs[f"edge_dst_{l}"] = flat.edge_dst[l]
+        arrs[f"edge_mask_{l}"] = flat.edge_mask[l]
+        arrs[f"edge_starts_{l}"] = flat.edge_starts[l]
+    with open(path, "wb") as f:
+        np.savez(f, **arrs)
+
+
+def load_epoch_npz(path: str) -> EpochSchedule:
+    with np.load(path) as z:
+        e, worker, m_max, L = (int(x) for x in z["meta"])
+        flat = FlatEpoch(
+            epoch=e, worker=worker, seeds=z["seeds"],
+            seed_starts=z["seed_starts"], input_nodes=z["input_nodes"],
+            input_starts=z["input_starts"], num_dst=z["num_dst"],
+            edge_src=[z[f"edge_src_{l}"] for l in range(L)],
+            edge_dst=[z[f"edge_dst_{l}"] for l in range(L)],
+            edge_mask=[z[f"edge_mask_{l}"] for l in range(L)],
+            edge_starts=[z[f"edge_starts_{l}"] for l in range(L)])
+        return EpochSchedule(epoch=e, flat=flat,
+                             remote_ids=z["remote_ids"],
+                             remote_freq=z["remote_freq"],
+                             cache_ids=z["cache_ids"], m_max=m_max)
 
 
 @dataclasses.dataclass
@@ -46,15 +132,13 @@ class WorkerSchedule:
     epochs: List[Optional[EpochSchedule]]
     spill_dir: Optional[str] = None
     #: per-epoch (m_max, edge_maxima) pad metadata, captured at build time
-    #: so pad-bound queries never re-unpickle spilled epochs from disk.
+    #: so pad-bound queries never re-load spilled epochs from disk.
     epoch_meta: Optional[List[Tuple[int, List[int]]]] = None
 
     def epoch(self, e: int) -> EpochSchedule:
         if self.epochs[e] is None:                      # spilled
-            path = os.path.join(self.spill_dir,
-                                f"w{self.worker}_e{e}.pkl")
-            with open(path, "rb") as f:
-                return pickle.load(f)
+            return load_epoch_npz(spill_path(self.spill_dir,
+                                             self.worker, e))
         return self.epochs[e]
 
     def _meta(self) -> List[Tuple[int, List[int]]]:
@@ -106,54 +190,77 @@ def merge_pad_bounds(
     return m_max, edge_max
 
 
+def select_hot_set(remote_ids: np.ndarray, remote_freq: np.ndarray,
+                   n_hot: int) -> np.ndarray:
+    """Top-``n_hot`` remote ids by (freq desc, id asc), returned SORTED.
+
+    The lexicographic tie-break is load-bearing: ``argpartition`` (the
+    historical selection) breaks frequency ties arbitrarily across numpy
+    versions/platforms, and a schedule whose C_s depends on partition
+    internals is not the paper's deterministic schedule (Prop 3.1).
+    ``remote_ids`` arrives ascending (``np.unique`` output), so a STABLE
+    sort on descending frequency realises (-freq, id) order exactly.
+    """
+    k = min(n_hot, remote_ids.shape[0])
+    if k <= 0:
+        return np.zeros(0, np.int64)
+    order = np.argsort(-remote_freq, kind="stable")
+    return np.sort(remote_ids[order[:k]])
+
+
 def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
-                 s0: int, e: int, train_nodes: np.ndarray,
-                 n_hot: int) -> EpochSchedule:
-    batches = sampler.sample_epoch(s0, worker, e, train_nodes)
+                 s0: int, e: int, train_nodes: np.ndarray, n_hot: int,
+                 compiler: str = "batched") -> EpochSchedule:
+    if compiler == "batched":
+        flat = sampler.sample_epoch_batched(s0, worker, e, train_nodes)
+    elif compiler == "loop":
+        flat = FlatEpoch.from_batches(
+            sampler.sample_epoch(s0, worker, e, train_nodes), epoch=e,
+            worker=worker, num_layers=len(sampler.fanouts))
+    else:
+        raise ValueError(f"unknown schedule compiler {compiler!r} "
+                         f"(expected 'batched' or 'loop')")
+    m_counts = flat.m_counts
+    m_max = int(m_counts.max()) if m_counts.size else 0
     # frequency over the epoch: one count per batch containing the node
-    # (N_i^e is a set -- matches the paper's freq(.) over {B_e})
-    all_remote: List[np.ndarray] = []
-    m_max = 0
-    for b in batches:
-        m_max = max(m_max, b.num_input_nodes)
-        remote = b.input_nodes[pg.owner[b.input_nodes] != worker]
-        all_remote.append(remote)
-    if all_remote:
-        cat = np.concatenate(all_remote)
-        remote_ids, remote_freq = np.unique(cat, return_counts=True)
+    # (N_i^e is a set; input_nodes are unique per batch, so one bincount
+    # over the flat stream IS the per-batch indicator sum)
+    remote = flat.input_nodes[pg.owner[flat.input_nodes] != worker]
+    if remote.size:
+        remote_ids, remote_freq = np.unique(remote, return_counts=True)
     else:
         remote_ids = np.zeros(0, np.int64)
         remote_freq = np.zeros(0, np.int64)
-    k = min(n_hot, remote_ids.shape[0])
-    if k > 0:
-        hot = remote_ids[np.argpartition(-remote_freq, k - 1)[:k]]
-        cache_ids = np.sort(hot)
-    else:
-        cache_ids = np.zeros(0, np.int64)
-    return EpochSchedule(epoch=e, batches=batches, remote_ids=remote_ids,
-                         remote_freq=remote_freq, cache_ids=cache_ids,
+    return EpochSchedule(epoch=e, flat=flat, remote_ids=remote_ids,
+                         remote_freq=remote_freq,
+                         cache_ids=select_hot_set(remote_ids, remote_freq,
+                                                  n_hot),
                          m_max=m_max)
 
 
 def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
                    s0: int, num_epochs: int, n_hot: int,
-                   spill_dir: Optional[str] = None) -> WorkerSchedule:
-    """Paper Alg. 1 lines 1-3, for one worker."""
+                   spill_dir: Optional[str] = None,
+                   compiler: str = "batched") -> WorkerSchedule:
+    """Paper Alg. 1 lines 1-3, for one worker.
+
+    ``compiler`` picks the epoch sampler: ``"batched"`` (default) is the
+    vectorized whole-epoch compiler, ``"loop"`` the per-batch oracle --
+    both produce bit-identical schedules (the parity suites pin it)."""
     local = pg.local_nodes[worker]
     tm = pg.graph.train_mask
     train_nodes = local[tm[local]] if tm is not None else local
     epochs: List[Optional[EpochSchedule]] = []
     epoch_meta: List[Tuple[int, List[int]]] = []
     for e in range(num_epochs):
-        es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot)
+        es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot,
+                          compiler=compiler)
         epoch_meta.append((es.m_max,
                            epoch_edge_maxima(es,
                                              num_layers=len(sampler.fanouts))))
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
-            with open(os.path.join(spill_dir, f"w{worker}_e{e}.pkl"),
-                      "wb") as f:
-                pickle.dump(es, f)
+            save_epoch_npz(spill_path(spill_dir, worker, e), es)
             epochs.append(None)
         else:
             epochs.append(es)
@@ -220,14 +327,16 @@ def collate(batch: SampledBatch, labels: np.ndarray, batch_size: int,
 
 def epoch_edge_maxima(es: EpochSchedule,
                       num_layers: Optional[int] = None) -> List[int]:
-    """Per-layer max padded edge count over the epoch's batches.
+    """Per-layer max padded edge count over the epoch's batches, read
+    straight off the FlatEpoch segment offsets (one ``diff().max()`` per
+    layer, no batch loop).
 
     An epoch with no batches (a worker whose partition holds no train
-    nodes) has no blocks to take the layer count from: with
-    ``num_layers`` given it contributes all-zero maxima, otherwise an
-    empty list -- ``pad_bounds`` skips both when merging."""
-    if not es.batches:
-        return [0] * (num_layers or 0)
-    L = len(es.batches[0].blocks)
-    return [max(b.blocks[l].edge_src.shape[0] for b in es.batches)
-            for l in range(L)]
+    nodes) contributes all-zero maxima (layer count from ``num_layers``
+    or the flat layout itself) -- ``pad_bounds`` skips those when
+    merging."""
+    flat = es.flat
+    if flat.num_batches == 0:
+        return [0] * (num_layers if num_layers is not None
+                      else flat.num_layers)
+    return [int(np.diff(s).max()) for s in flat.edge_starts]

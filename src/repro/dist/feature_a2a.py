@@ -108,6 +108,15 @@ def build_pull_plan(ids: np.ndarray, pos: np.ndarray, owner: np.ndarray,
                     send_mask=send_mask, counts=counts)
 
 
+def _fast_key_fits(num_groups: int, num_parts: int, span_i: int,
+                   span_p: int) -> bool:
+    """True when the rebased composite (group, id, pos) key fits int64
+    headroom (< 2**62), i.e. the single-sort fast path is safe. Spans
+    are REBASED extents (``max - min + 1``), not absolute maxima --
+    exposed for the boundary regression tests."""
+    return num_groups * num_parts * span_i * span_p < 2 ** 62
+
+
 def pack_pull_lanes(ids: np.ndarray, pos: np.ndarray, group: np.ndarray,
                     owner: np.ndarray, num_groups: int, num_parts: int,
                     k_max: int, assume_unique: bool = False):
@@ -152,10 +161,15 @@ def pack_pull_lanes(ids: np.ndarray, pos: np.ndarray, group: np.ndarray,
     # value ranges allow it -- a single introsort beats the 3-key
     # lexsort ~3x at epoch scale. Stability is irrelevant: the key is
     # unique per lane except for EXACT duplicates, which dedupe anyway.
-    span_i = int(ids.max()) + 1
-    span_p = int(pos.max()) + 1
-    if num_groups * num_parts * span_i * span_p < 2 ** 62:
-        key = (gidx * span_i + ids) * span_p + pos
+    # Keys are REBASED to the observed min so only the id/pos SPANS
+    # spend key bits: a large device-id base (big P*n_per meshes put
+    # every id near P*n_per) must not push an epoch whose actual id
+    # range is tiny onto the slow lexsort fallback.
+    imin, pmin = int(ids.min()), int(pos.min())
+    span_i = int(ids.max()) - imin + 1
+    span_p = int(pos.max()) - pmin + 1
+    if _fast_key_fits(num_groups, num_parts, span_i, span_p):
+        key = (gidx * span_i + (ids - imin)) * span_p + (pos - pmin)
         order = np.argsort(key)
         if not assume_unique:
             k_s = key[order]

@@ -22,10 +22,13 @@ schedule): ``DeviceView`` relabels the partitioned graph into contiguous
 per-worker slot ranges so ownership is ``id // n_per``; ``epoch_k_max``
 computes the exact static lane bound; ``collate_device_epoch`` packs a
 whole epoch into (S, P, ...) arrays in one VECTORIZED pass (single
-``g2d`` gather, one cache ``searchsorted``, batched lane packing --
-DESIGN.md §6.6; the per-(step, worker) loop survives as
-``collate_device_epoch_loop``, the parity/bench reference);
-``stack_caches`` stacks the per-worker hot sets C_s.
+``g2d`` gather over the schedule compiler's FlatEpoch streams, one
+stamp-table membership pass per worker, batched lane packing,
+boolean-mask slab fills for every ragged array -- DESIGN.md §6.6; the
+per-(step,
+worker) loop survives as ``collate_device_epoch_loop``, the
+parity/bench reference); ``stack_caches`` stacks the per-worker hot
+sets C_s.
 """
 from __future__ import annotations
 
@@ -115,29 +118,31 @@ def _batch_miss(es_batch, cache: DeviceCache, dv: DeviceView, worker: int):
 
 def _epoch_flat(es_list: Sequence[EpochSchedule], dv: DeviceView
                 ) -> Optional[Dict[str, np.ndarray]]:
-    """Flatten an epoch's every (worker, batch) input-node list into
-    aligned per-element arrays with ONE ``g2d`` gather (the vectorized
-    staging spine, DESIGN.md §6.6).
+    """Splice the P workers' FlatEpoch payloads into one worker-major
+    batch stream with ONE ``g2d`` gather (the vectorized staging spine,
+    DESIGN.md §6.6). Since the schedule compiler already stores each
+    worker-epoch flat (CSR offsets, no per-batch objects), this is P
+    concatenations -- the per-(worker, batch) rec loop is gone.
 
-    -> dict: per-batch ``step``/``worker``/``m_counts``/``starts``
-    (element offsets) plus the per-element ``dev`` device ids; None for
-    an epoch with no batches at all. Per-element batch/column
-    coordinates are NOT materialized here -- ``_miss_coords`` derives
-    them lazily for just the miss subset.
+    -> dict: the per-worker ``flats`` plus per-batch ``step``/``worker``
+    /``m_counts``/``starts`` (element offsets) and the per-element
+    ``dev`` device ids; None for an epoch with no batches at all.
+    Per-element batch/column coordinates are NOT materialized here --
+    ``_miss_coords`` derives them lazily for just the miss subset.
     """
-    recs = [(w, i, b) for w, es in enumerate(es_list)
-            for i, b in enumerate(es.batches)]
-    if not recs:
+    flats = [es.flat for es in es_list]
+    nbs = np.fromiter((f.num_batches for f in flats), np.int64,
+                      len(flats))
+    n = int(nbs.sum())
+    if n == 0:
         return None
-    n = len(recs)
-    step = np.fromiter((i for _, i, _ in recs), np.int64, n)
-    worker = np.fromiter((w for w, _, _ in recs), np.int64, n)
-    m_counts = np.fromiter((b.num_input_nodes for _, _, b in recs),
-                           np.int64, n)
-    dev = dv.g2d[np.concatenate([b.input_nodes for _, _, b in recs])]
+    step = np.concatenate([np.arange(nb, dtype=np.int64) for nb in nbs])
+    worker = np.repeat(np.arange(len(flats), dtype=np.int64), nbs)
+    m_counts = np.concatenate([f.m_counts for f in flats])
+    dev = dv.g2d[np.concatenate([f.input_nodes for f in flats])]
     starts = np.zeros(n + 1, np.int64)
     np.cumsum(m_counts, out=starts[1:])
-    return {"recs": recs, "step": step, "worker": worker,
+    return {"flats": flats, "step": step, "worker": worker,
             "m_counts": m_counts, "dev": dev, "starts": starts}
 
 
@@ -248,7 +253,7 @@ def _alloc_epoch(P_: int, S: int, batch_size: int, m_max: int,
 
 
 def _check_num_steps(es_list: Sequence[EpochSchedule], S: int) -> None:
-    over = [w for w, es in enumerate(es_list) if len(es.batches) > S]
+    over = [w for w, es in enumerate(es_list) if es.num_batches > S]
     if over:
         raise ValueError(
             f"workers {over} have more batches than num_steps={S}; "
@@ -273,14 +278,15 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     instead of S x P small ones (DESIGN.md §6.6): one ``g2d`` gather
     over every input node, one label gather over every seed, one
     stamp-table membership pass per worker for miss classification
-    (``_classify_misses``, replacing S x P ``np.isin`` re-sorts), and
-    one sort-based lane packing (``pack_pull_lanes``) replacing S x P
-    ``build_pull_plan`` calls. Only the ragged padded-array fills
-    (edges, input ids) stay per-batch -- they are contiguous slice
-    memcpys, which beat any index-based scatter -- writing straight
-    into the output with no intermediate per-batch ``collate`` pads.
-    This is what keeps the host's double-buffer staging ahead of the
-    device at 256+ workers.
+    (``_classify_misses``, replacing S x P ``np.isin`` re-sorts), one
+    sort-based lane packing (``pack_pull_lanes``) replacing S x P
+    ``build_pull_plan`` calls, and -- now that the schedule compiler
+    stores each worker-epoch as a FlatEpoch -- ONE boolean-mask
+    assignment per (worker, output array) for the ragged padded fills,
+    streaming each worker's flat arrays into its padded slab in C
+    order, replacing the last per-batch memcpy loop. This is what
+    keeps the host's double-buffer staging ahead of the device at 256+
+    workers.
 
     ``m_max``/``edge_max``/``k_max``/``num_steps`` are precomputed
     bounds -- the multi-epoch runner passes GLOBAL (all-epoch, all-
@@ -299,35 +305,39 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     flat = _epoch_flat(es_list, dv)
     if flat is None:
         return out
-    recs = flat["recs"]
-    n = len(recs)
+    flats = flat["flats"]
     row = flat["step"] * P_ + flat["worker"]    # batch -> flat (step, w)
     dev, starts = flat["dev"], flat["starts"]
 
-    # seeds/labels: ONE label gather over every seed in the epoch
-    seed_counts = np.fromiter((b.seeds.shape[0] for _, _, b in recs),
-                              np.int64, n)
-    lab_all = labels[np.concatenate([b.seeds for _, _, b in recs])]
-    sstart = np.zeros(n + 1, np.int64)
-    np.cumsum(seed_counts, out=sstart[1:])
+    # ragged padded fills: per worker slab, ONE boolean-mask assignment
+    # per output array. The mask `arange(K) < counts[:, None]` iterates
+    # the (S, K) slab in C order, which is exactly the worker's flat
+    # stream order, so `slab[valid] = stream` is a single compiled
+    # sequential copy -- no per-batch loop, no index arrays (an
+    # int64-index scatter moves 3x the bytes and measured ~2x slower)
+    def _pad_counts(cnts: np.ndarray) -> np.ndarray:
+        full = np.zeros(S, np.int64)
+        full[:cnts.shape[0]] = cnts
+        return full
 
-    # ragged padded fills: contiguous slice memcpys straight into the
-    # output (no per-batch collate() intermediates)
-    inp = out["input_nodes"]
-    lab = out["labels"]
-    smk = out["seed_mask"]
-    m_counts = flat["m_counts"]
-    for t, (w, i, b) in enumerate(recs):
-        inp[i, w, :m_counts[t]] = dev[starts[t]:starts[t + 1]]
-        nb = seed_counts[t]
-        lab[i, w, :nb] = lab_all[sstart[t]:sstart[t + 1]]
-        smk[i, w, :nb] = True
+    lo = 0
+    for w, f in enumerate(flats):
+        if f.num_batches == 0:
+            continue    # fully masked worker; may carry 0 layer info
+        span = int(f.input_starts[-1])
+        valid = np.arange(m_max) < _pad_counts(f.m_counts)[:, None]
+        out["input_nodes"][:, w][valid] = dev[lo:lo + span]
+        lo += span
+        svalid = np.arange(batch_size) < \
+            _pad_counts(np.diff(f.seed_starts))[:, None]
+        out["labels"][:, w][svalid] = labels[f.seeds]
+        out["seed_mask"][:, w][svalid] = True
         for l in range(len(edge_max)):
-            blk = b.blocks[l]
-            E = blk.edge_src.shape[0]
-            out["edge_src"][l][i, w, :E] = blk.edge_src
-            out["edge_dst"][l][i, w, :E] = blk.edge_dst
-            out["edge_mask"][l][i, w, :E] = blk.edge_mask
+            evalid = np.arange(edge_max[l]) < \
+                _pad_counts(np.diff(f.edge_starts[l]))[:, None]
+            out["edge_src"][l][:, w][evalid] = f.edge_src[l]
+            out["edge_dst"][l][:, w][evalid] = f.edge_dst[l]
+            out["edge_mask"][l][:, w][evalid] = f.edge_mask[l]
 
     # residual-miss pull lanes: one classification + one batched packing
     miss, owner_miss = _classify_misses(flat, caches, dv)

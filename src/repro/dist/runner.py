@@ -107,7 +107,7 @@ class _DeviceRunnerBase:
         # lane bound maxed over every (worker, epoch) -- the
         # one-compilation key (per-epoch bounds would retrigger tracing).
         # One pass loads each (worker, epoch) once (spilled schedules
-        # unpickle here and once more when the epoch is staged). Only the
+        # load here and once more when the epoch is staged). Only the
         # bound SCALARS are retained: cache feature rows are rebuilt per
         # staged epoch so at most two epochs' C_s/C_sec are live at once
         # (the paper's 2*n_hot*d memory bound, not E*n_hot*d).

@@ -8,6 +8,10 @@ pair, everything written to ``artifacts/BENCH_paper.json``.
 
 ``--full`` swaps in the paper-scale host grid (Tables 2/3 axes; slow).
 ``--host-only`` skips the device subprocess (e.g. minimal CI images).
+``--loop-sampler`` swaps every cell's schedule path to the per-batch
+oracle (``build_schedule(compiler="loop")``); the default is the
+vectorized epoch-at-once compiler -- schedules are bit-identical either
+way, so all differential checks must pass under both.
 ``--inject-miscount`` perturbs one cell's counters AFTER measurement --
 the differential layer must then fail and the CLI exit non-zero; this
 is the self-test proving the checks have teeth.
@@ -104,6 +108,9 @@ def main(argv=None) -> int:
                     help="paper-scale host grid + device pair (slow)")
     ap.add_argument("--host-only", action="store_true",
                     help="skip device-backend cells (no subprocess)")
+    ap.add_argument("--loop-sampler", action="store_true",
+                    help="build schedules with the per-batch oracle "
+                         "sampler instead of the batched compiler")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="artifact path (default artifacts/"
                          "BENCH_paper.json)")
@@ -121,6 +128,12 @@ def main(argv=None) -> int:
         return 0
 
     spec = full_grid() if args.full else fast_grid()
+    if args.loop_sampler:
+        import dataclasses
+        spec = CampaignSpec(
+            name=f"{spec.name}-loop",
+            cells=tuple(dataclasses.replace(c, schedule_compiler="loop")
+                        for c in spec.cells))
     report = run_campaign(
         spec, include_device=not args.host_only, out_path=args.out,
         log=print,

@@ -142,7 +142,8 @@ def run_host_cell(spec: CellSpec, worker: int = 0,
     for w in workers:
         ws = build_schedule(sampler, pg, worker=w, s0=spec.seed,
                             num_epochs=spec.epochs,
-                            n_hot=spec.n_hot if spec.is_rapid else 0)
+                            n_hot=spec.n_hot if spec.is_rapid else 0,
+                            compiler=spec.schedule_compiler)
         state = {"losses": [], "accs": []}
         if spec.train:
             params = init_params(cfg, jax.random.key(spec.seed))
@@ -306,7 +307,8 @@ def _build_device_scenario(spec: CellSpec) -> dict:
     sampler = KHopSampler(g, fanouts=list(spec.fanouts),
                           batch_size=spec.batch_size)
     schedules = [build_schedule(sampler, pg, worker=w, s0=spec.seed,
-                                num_epochs=spec.epochs, n_hot=spec.n_hot)
+                                num_epochs=spec.epochs, n_hot=spec.n_hot,
+                                compiler=spec.schedule_compiler)
                  for w in range(spec.workers)]
     return {"g": g, "pg": pg, "schedules": schedules,
             "dv": DeviceView.build(pg),

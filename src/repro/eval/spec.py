@@ -43,6 +43,11 @@ class CellSpec:
     train: bool = True
     all_workers: bool = True        # host: run every worker (device always)
     net_enabled: bool = True        # host network-model sleeps
+    #: epoch sampler: "batched" = the vectorized schedule compiler
+    #: (default), "loop" = the per-batch oracle. Bit-identical schedules
+    #: by the parity contract, so deliberately NOT part of
+    #: ``scenario_key()`` -- cells differing only here still pair.
+    schedule_compiler: str = "batched"
 
     def __post_init__(self):
         if self.backend not in ("host", "device"):
@@ -51,6 +56,9 @@ class CellSpec:
         if self.system not in systems:
             raise ValueError(f"system {self.system!r} not available on "
                              f"backend {self.backend!r} (have {systems})")
+        if self.schedule_compiler not in ("batched", "loop"):
+            raise ValueError(f"unknown schedule_compiler "
+                             f"{self.schedule_compiler!r}")
         object.__setattr__(self, "fanouts", tuple(self.fanouts))
 
     @property

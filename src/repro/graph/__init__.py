@@ -2,10 +2,10 @@
 from repro.graph.graph import Graph
 from repro.graph.generate import make_powerlaw_graph, DATASETS, load_dataset
 from repro.graph.partition import random_partition, greedy_partition, PartitionedGraph, partition_graph
-from repro.graph.sampler import KHopSampler, SampledBatch
+from repro.graph.sampler import FlatEpoch, KHopSampler, SampledBatch
 
 __all__ = [
     "Graph", "make_powerlaw_graph", "DATASETS", "load_dataset",
     "random_partition", "greedy_partition", "PartitionedGraph", "partition_graph",
-    "KHopSampler", "SampledBatch",
+    "KHopSampler", "SampledBatch", "FlatEpoch",
 ]

@@ -16,9 +16,14 @@ Domain strategies:
                                 and padding ids for the lane packer
   * ``plan_round_trips``     -- (P, n_per, d, m, seed) shapes for the
                                 pull-plan owner/slot round trip
+  * ``sampler_epoch_cases``  -- (graph, train, fanouts, B, s0, w, e)
+                                for the schedule-compiler parity suite:
+                                drawn graphs WITH zero-degree nodes,
+                                empty / tiny / full train sets,
+                                batch_size > |train|
 
-plus ``build_assemble_case`` as a plain deterministic builder the
-non-property regression tests anchor on.
+plus ``build_assemble_case`` / ``build_sampler_graph`` as plain
+deterministic builders the non-property regression tests anchor on.
 """
 from __future__ import annotations
 
@@ -130,6 +135,54 @@ def assemble_cases(draw):
     rng = np.random.default_rng(draw(seeds()))
     return build_assemble_case(kind, rng, P_=4, n_per=n_per, d=d,
                                n_hot=n_hot, m=m)
+
+
+# ---------------------------------------------------------------------------
+# sampler epochs (schedule-compiler parity, DESIGN.md §2.1)
+# ---------------------------------------------------------------------------
+
+def build_sampler_graph(seed, n=40, n_zero=6, avg_deg=3):
+    """Small random in-CSR graph whose first ``n_zero`` nodes have NO
+    in-edges (the zero-degree masked-self-loop path the sampler must
+    pad), deterministic given ``seed``."""
+    from repro.graph.graph import Graph
+
+    rng = np.random.default_rng(seed)
+    ne = n * avg_deg
+    dst = rng.integers(n_zero, n, size=ne).astype(np.int64)
+    src = rng.integers(0, n, size=ne).astype(np.int64)
+    return Graph.from_edges(
+        src, dst, n, features=np.zeros((n, 4), np.float32),
+        labels=rng.integers(0, 4, size=n).astype(np.int32),
+        num_classes=4)
+
+
+@composite
+def sampler_epoch_cases(draw):
+    """-> (graph, train_nodes, fanouts, batch_size, s0, worker, epoch)
+    covering the compiler's boundary inputs: zero-degree nodes in and
+    around the frontier, EMPTY train sets, train sets smaller than one
+    batch (batch_size > |train|), and 1-3 layer fanout stacks."""
+    n = draw(st.integers(12, 60))
+    n_zero = draw(st.integers(0, n // 4))
+    g = build_sampler_graph(draw(seeds()), n=n, n_zero=n_zero,
+                            avg_deg=draw(st.integers(1, 6)))
+    kind = draw(st.sampled_from(["empty", "tiny", "all", "subset"]))
+    rng = np.random.default_rng(draw(seeds()))
+    if kind == "empty":
+        train = np.zeros(0, np.int64)
+    elif kind == "tiny":        # with B up to 16: batch_size > |train|
+        train = rng.choice(n, size=draw(st.integers(1, 3)),
+                           replace=False)
+    elif kind == "all":
+        train = np.arange(n, dtype=np.int64)
+    else:
+        train = rng.choice(n, size=draw(st.integers(1, n)),
+                           replace=False)
+    fanouts = draw(st.sampled_from([(3,), (3, 2), (4, 3, 2)]))
+    return (g, np.sort(train).astype(np.int64), fanouts,
+            draw(st.integers(1, 16)), draw(st.integers(0, 999)),
+            draw(st.integers(0, 3)), draw(st.integers(0, 3)))
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,61 @@ def test_overflow_raises_not_truncates():
     assert int(plan.counts[0]) == 10
 
 
+def test_pack_pull_lanes_big_base_stays_on_fast_path(monkeypatch):
+    """Regression: ``span_i`` computed from ``ids.max() + 1`` pushed big
+    device-id bases (large P*n_per puts every id near 2**31) onto the
+    slow lexsort fallback even when the epoch's actual id RANGE was
+    tiny. The rebased key must (a) keep this boundary case on the
+    single-sort path and (b) pack identically to both the lexsort
+    fallback and per-group ``build_pull_plan``."""
+    from repro.dist import feature_a2a
+    from repro.dist.feature_a2a import _fast_key_fits, pack_pull_lanes
+
+    num_groups, P_ = 1536, 256            # 6 steps x 256 workers
+    base = 2 ** 31 - 2 ** 13              # ids stay int32-safe
+    rng = np.random.default_rng(0)
+    n = 400
+    ids = (base + rng.integers(0, 4096, size=n)).astype(np.int64)
+    pos = rng.integers(0, 8192, size=n).astype(np.int64)
+    group = rng.integers(0, num_groups, size=n).astype(np.int64)
+    owner = rng.integers(0, P_, size=n).astype(np.int64)
+    k_max = 8
+
+    # the historical absolute-max span overflows the int64 key budget...
+    assert not _fast_key_fits(num_groups, P_, int(ids.max()) + 1,
+                              int(pos.max()) + 1)
+    # ...the rebased span does not: the fast path stays available
+    assert _fast_key_fits(num_groups, P_,
+                          int(ids.max()) - int(ids.min()) + 1,
+                          int(pos.max()) - int(pos.min()) + 1)
+
+    args = (ids, pos, group, owner, num_groups, P_, k_max)
+    fast = pack_pull_lanes(*args)
+    monkeypatch.setattr(feature_a2a, "_fast_key_fits",
+                        lambda *a: False)       # force lexsort fallback
+    slow = pack_pull_lanes(*args)
+    for a, b in zip(fast, slow):
+        np.testing.assert_array_equal(a, b)
+    monkeypatch.undo()
+
+    # lane contents: every (group, owner) lane holds exactly its
+    # requests, ascending by (id, pos) -- the build_pull_plan contract
+    sids, spos, smask, counts = fast
+    assert int(counts.sum()) == n
+    for gid in np.unique(group):
+        sel = group == gid
+        for p in np.unique(owner[sel]):
+            lane = smask[gid, p]
+            want = sel & (owner == p)
+            order = np.lexsort((pos[want], ids[want]))
+            np.testing.assert_array_equal(
+                sids[gid, p][lane],
+                ids[want][order].astype(np.int32))
+            np.testing.assert_array_equal(
+                spos[gid, p][lane],
+                pos[want][order].astype(np.int32))
+
+
 def test_device_view_round_trip():
     """DeviceView relabeling: g2d is a bijection onto per-partition slot
     ranges and the sharded table holds the right rows."""

@@ -1,0 +1,233 @@
+"""Schedule-compiler suite (ISSUE 5 / DESIGN.md §2.1): the vectorized
+``sample_epoch_batched`` must be BIT-identical to the per-batch
+``sample_epoch`` oracle, FlatEpoch must round-trip through its
+SampledBatch views and the npz spill, and hot-set selection must break
+frequency ties deterministically (Prop 3.1)."""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hyp import ALL_HEALTH_CHECKS, given, settings
+from strategies import build_sampler_graph, sampler_epoch_cases
+from repro.graph import load_dataset, partition_graph, KHopSampler
+from repro.graph.sampler import FlatEpoch
+from repro.core import build_schedule
+from repro.core.schedule import select_hot_set
+
+
+def assert_batches_bit_equal(ref, got):
+    assert len(ref) == len(got)
+    for br, bn in zip(ref, got):
+        assert (br.epoch, br.index, br.worker) == \
+            (bn.epoch, bn.index, bn.worker)
+        np.testing.assert_array_equal(br.seeds, bn.seeds)
+        np.testing.assert_array_equal(br.input_nodes, bn.input_nodes)
+        assert br.input_nodes.dtype == bn.input_nodes.dtype
+        assert len(br.blocks) == len(bn.blocks)
+        for x, y in zip(br.blocks, bn.blocks):
+            assert (x.num_src, x.num_dst) == (y.num_src, y.num_dst)
+            for f in ("edge_src", "edge_dst", "edge_mask"):
+                a, b = getattr(x, f), getattr(y, f)
+                np.testing.assert_array_equal(a, b)
+                assert a.dtype == b.dtype
+
+
+# ---- batched vs per-batch oracle (the tentpole contract) -----------------
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(sampler_epoch_cases())
+def test_batched_sampler_bit_equal_to_loop(case):
+    """For ANY drawn (graph, train, fanouts, B): every seed, input-node
+    and edge array of every batch is bit-equal between the whole-epoch
+    compiler and the per-batch oracle -- including zero-degree nodes,
+    empty train sets and batch_size > |train|."""
+    g, train, fanouts, B, s0, w, e = case
+    sampler = KHopSampler(g, fanouts=list(fanouts), batch_size=B)
+    loop = sampler.sample_epoch(s0, w, e, train)
+    flat = sampler.sample_epoch_batched(s0, w, e, train)
+    assert flat.num_batches == len(loop)
+    assert flat.num_layers == len(fanouts)
+    assert_batches_bit_equal(loop, flat.to_batches())
+
+
+def test_batched_sampler_int64_key_fallback(monkeypatch):
+    """Key spaces past the int32 bound take the wide-key path; it must
+    stay bit-equal to the oracle too."""
+    import repro.graph.sampler as sampler_mod
+
+    g = build_sampler_graph(3, n=50, n_zero=8)
+    train = np.arange(50, dtype=np.int64)
+    s = KHopSampler(g, fanouts=[3, 2], batch_size=7)
+    monkeypatch.setattr(sampler_mod, "KEY_INT32_MAX_SLOTS", 0)
+    flat = s.sample_epoch_batched(11, 0, 1, train)
+    monkeypatch.undo()
+    assert_batches_bit_equal(s.sample_epoch(11, 0, 1, train),
+                             flat.to_batches())
+
+
+# ---- FlatEpoch <-> SampledBatch round trip -------------------------------
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(sampler_epoch_cases())
+def test_flat_epoch_round_trip(case):
+    """from_batches(to_batches(flat)) reproduces every flat array,
+    offset vector and dtype."""
+    g, train, fanouts, B, s0, w, e = case
+    sampler = KHopSampler(g, fanouts=list(fanouts), batch_size=B)
+    flat = sampler.sample_epoch_batched(s0, w, e, train)
+    back = FlatEpoch.from_batches(flat.to_batches(), epoch=e, worker=w,
+                                  num_layers=len(fanouts))
+    for f in ("seeds", "seed_starts", "input_nodes", "input_starts",
+              "num_dst"):
+        np.testing.assert_array_equal(getattr(back, f), getattr(flat, f))
+    for l in range(flat.num_layers):
+        for f in ("edge_src", "edge_dst", "edge_mask", "edge_starts"):
+            a, b = getattr(back, f)[l], getattr(flat, f)[l]
+            np.testing.assert_array_equal(a, b)
+            assert a.dtype == b.dtype
+
+
+# ---- build_schedule: loop oracle, npz spill ------------------------------
+
+def _assert_epochs_equal(a, b):
+    assert a.epoch == b.epoch and a.m_max == b.m_max
+    for f in ("remote_ids", "remote_freq", "cache_ids"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    assert_batches_bit_equal(a.batches, b.batches)
+
+
+def test_build_schedule_compilers_identical():
+    """End to end on a real partitioned graph: the batched compiler and
+    the loop oracle produce identical schedules (payload + hot-set
+    metadata + pad bounds)."""
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 4, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=16)
+    kw = dict(s0=42, num_epochs=2, n_hot=64)
+    for w in range(4):
+        wb = build_schedule(sampler, pg, worker=w, compiler="batched",
+                            **kw)
+        wl = build_schedule(sampler, pg, worker=w, compiler="loop", **kw)
+        for e in range(2):
+            _assert_epochs_equal(wb.epoch(e), wl.epoch(e))
+        assert wb.pad_bounds() == wl.pad_bounds()
+    with pytest.raises(ValueError):
+        build_schedule(sampler, pg, worker=0, compiler="bogus", **kw)
+
+
+def test_npz_spill_round_trip_equals_in_memory():
+    """Spilled epochs reload bit-equal to the in-memory schedule: flat
+    payload, hot-set metadata, pad bounds."""
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    kw = dict(worker=0, s0=7, num_epochs=2, n_hot=64)
+    mem = build_schedule(sampler, pg, **kw)
+    with tempfile.TemporaryDirectory() as td:
+        sp = build_schedule(sampler, pg, spill_dir=td, **kw)
+        assert all(x is None for x in sp.epochs)
+        for e in range(2):
+            a, b = mem.epoch(e), sp.epoch(e)
+            _assert_epochs_equal(a, b)
+            for f in ("seed_starts", "input_starts"):
+                np.testing.assert_array_equal(getattr(a.flat, f),
+                                              getattr(b.flat, f))
+        assert mem.pad_bounds() == sp.pad_bounds()
+
+
+# ---- deterministic hot-set selection (satellite: Prop 3.1) ---------------
+
+def test_hot_set_tie_break_boundary():
+    """Frequency ties straddling the n_hot boundary resolve by (freq
+    desc, id asc) -- never by partition internals."""
+    ids = np.array([10, 11, 12, 13, 14], np.int64)
+    freq = np.array([3, 1, 2, 1, 1], np.int64)
+    # boundary cuts through the freq-1 tie class {11, 13, 14}: the
+    # lowest id must win the last slot
+    np.testing.assert_array_equal(select_hot_set(ids, freq, 3),
+                                  [10, 11, 12])
+    np.testing.assert_array_equal(select_hot_set(ids, freq, 4),
+                                  [10, 11, 12, 13])
+    # all tied: lowest ids win
+    np.testing.assert_array_equal(
+        select_hot_set(ids, np.ones(5, np.int64), 2), [10, 11])
+    # degenerate sizes
+    np.testing.assert_array_equal(select_hot_set(ids, freq, 99), ids)
+    assert select_hot_set(np.zeros(0, np.int64),
+                          np.zeros(0, np.int64), 4).size == 0
+    assert select_hot_set(ids, freq, 0).size == 0
+
+
+def test_hot_set_deterministic_on_real_schedule():
+    """The built cache is exactly the (freq desc, id asc) prefix of the
+    epoch's remote set -- reconstructable from remote_ids/remote_freq
+    alone, so no numpy partition detail can leak in."""
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 4, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=16)
+    ws = build_schedule(sampler, pg, worker=1, s0=3, num_epochs=1,
+                        n_hot=40)
+    es = ws.epoch(0)
+    assert 0 < es.cache_ids.shape[0] <= 40
+    order = np.lexsort((es.remote_ids, -es.remote_freq))
+    want = np.sort(es.remote_ids[order[:es.cache_ids.shape[0]]])
+    np.testing.assert_array_equal(es.cache_ids, want)
+
+
+# ---- zero-batch synthetic workers through the device collation -----------
+
+def test_collate_skips_zero_layer_empty_worker():
+    """Regression: a synthetic ``EpochSchedule(batches=[])`` carries a
+    0-layer FlatEpoch (no layer count to infer); the slab-fill loop
+    must skip it like the old rec loop did, leaving its steps fully
+    masked."""
+    from repro.core.schedule import EpochSchedule
+    from repro.dist.gnn_step import (collate_device_epoch,
+                                     collate_device_epoch_loop,
+                                     empty_caches)
+    from repro.dist import DeviceView
+
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    dv = DeviceView.build(pg)
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=16)
+    ws = build_schedule(sampler, pg, worker=0, s0=1, num_epochs=1,
+                        n_hot=0)
+    es_list = [ws.epoch(0), EpochSchedule(epoch=0, batches=[])]
+    caches = empty_caches(2, g.feat_dim)
+    from repro.core.schedule import epoch_edge_maxima
+    edge_max = epoch_edge_maxima(es_list[0])
+    args = (es_list, caches, dv, g.labels, 16, es_list[0].m_max,
+            edge_max, 64, es_list[0].num_batches)
+    vec = collate_device_epoch(*args)
+    loop = collate_device_epoch_loop(*args)
+    for k in ("input_nodes", "labels", "seed_mask", "send_ids",
+              "send_pos", "send_mask"):
+        np.testing.assert_array_equal(vec[k], loop[k])
+    for k in ("edge_src", "edge_dst", "edge_mask"):
+        for l in range(len(edge_max)):
+            np.testing.assert_array_equal(vec[k][l], loop[k][l])
+    assert not vec["seed_mask"][:, 1].any()     # empty worker all-masked
+
+
+# ---- campaign plumbing ---------------------------------------------------
+
+def test_cellspec_schedule_compiler_field():
+    from repro.eval.spec import CellSpec
+
+    c = CellSpec(backend="host", system="rapidgnn", dataset="tiny",
+                 batch_size=16, workers=4, n_hot=64, epochs=1,
+                 schedule_compiler="loop")
+    assert CellSpec.from_dict(c.to_dict()) == c
+    # the compiler toggle is NOT part of the differential pairing key:
+    # schedules are bit-identical either way
+    assert c.scenario_key() == dataclasses.replace(
+        c, schedule_compiler="batched").scenario_key()
+    with pytest.raises(ValueError):
+        CellSpec(backend="host", system="rapidgnn", dataset="tiny",
+                 batch_size=16, workers=4, n_hot=64, epochs=1,
+                 schedule_compiler="bogus")

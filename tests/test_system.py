@@ -135,7 +135,8 @@ def test_cosine_schedule_and_global_norm():
 
 
 def test_spill_to_disk_schedule(tmp_path):
-    """SSD-streaming mode: schedules spilled per epoch, reloaded on use."""
+    """SSD-streaming mode: schedules spilled per epoch as flat npz
+    blocks (no pickled object graph), reloaded on use."""
     g = load_dataset("tiny")
     pg = partition_graph(g, 2, "greedy")
     sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
@@ -144,4 +145,4 @@ def test_spill_to_disk_schedule(tmp_path):
     assert all(e is None for e in ws.epochs)
     es = ws.epoch(1)
     assert es.num_batches > 0
-    assert os.path.exists(tmp_path / "w0_e1.pkl")
+    assert os.path.exists(tmp_path / "w0_e1.npz")
