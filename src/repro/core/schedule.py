@@ -4,7 +4,9 @@ Precomputes, per worker, the full deterministic training schedule:
   * every epoch's batch metadata  {B_e}  (ids / offsets / locality only),
     compiled whole-epoch by ``KHopSampler.sample_epoch_batched`` into a
     packed ``FlatEpoch`` (DESIGN.md §2.1; the per-batch ``sample_epoch``
-    loop survives as the parity oracle, ``compiler="loop"``),
+    loop survives as the parity oracle, ``compiler="loop"``, and
+    ``compiler="device"`` runs the sort-bound middle on the accelerator,
+    DESIGN.md §2.2 -- all three bit-identical),
   * the access union  N = U_e U_i N_i^e  and  N_remote = N \\ N_local,
   * per-epoch remote access frequencies  freq(.)  over {B_e},
   * the hot set  N_cache = top-n_hot of N_remote by (freq desc, id asc)
@@ -16,13 +18,19 @@ Like the paper's SSD streaming, epochs can be spilled to disk
 (``spill_dir``): the FlatEpoch arrays go straight into one ``np.savez``
 file per (worker, epoch) -- flat ndarray blocks, no pickled object
 graph -- so spills are smaller and reload without per-batch
-reconstruction.
+reconstruction. The writes themselves run on a background
+``SpillWriter`` thread, off the build loop's critical path. A schedule
+can instead stay DEVICE-RESIDENT (``lazy=True``): no payload retention,
+no spill -- ``epoch(e)`` re-runs the deterministic compiler on demand,
+which the device runner's staging thread overlaps with training.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import List, Optional, Sequence, Tuple
+import queue
+import threading
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -107,6 +115,52 @@ def save_epoch_npz(path: str, es: EpochSchedule) -> None:
         np.savez(f, **arrs)
 
 
+class SpillWriter:
+    """Background npz spill writer: ``save_epoch_npz`` runs on a worker
+    thread so disk writes come OFF the build loop's critical path (the
+    write of epoch ``e`` overlaps the build of epoch ``e+1``).
+    ``flush()`` joins the queue at epoch boundaries -- at most one spill
+    is ever in flight, bounding live payload memory at two epochs -- and
+    re-raises any writer-thread failure on the submitting thread."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                path, es = item
+                save_epoch_npz(path, es)
+            except BaseException as exc:      # surfaced at next flush()
+                self._err = exc
+            finally:
+                self._q.task_done()
+
+    def submit(self, path: str, es: EpochSchedule) -> None:
+        self._raise_pending()
+        self._q.put((path, es))
+
+    def flush(self) -> None:
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        self.flush()
+        self._q.put(None)
+        self._t.join()
+
+    def _raise_pending(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("background spill write failed") from err
+
+
 def load_epoch_npz(path: str) -> EpochSchedule:
     with np.load(path) as z:
         e, worker, m_max, L = (int(x) for x in z["meta"])
@@ -134,10 +188,18 @@ class WorkerSchedule:
     #: per-epoch (m_max, edge_maxima) pad metadata, captured at build time
     #: so pad-bound queries never re-load spilled epochs from disk.
     epoch_meta: Optional[List[Tuple[int, List[int]]]] = None
+    #: device-resident mode (``build_schedule(lazy=True)``): epoch
+    #: payloads are not held in memory OR spilled to disk -- ``epoch(e)``
+    #: re-runs the deterministic compiler on demand (bit-identical by
+    #: Prop 3.1), so the runner's staging thread can rebuild epoch e+1
+    #: while epoch e trains.
+    builder: Optional[Callable[[int], EpochSchedule]] = None
 
     def epoch(self, e: int) -> EpochSchedule:
-        if self.epochs[e] is None:                      # spilled
-            return load_epoch_npz(spill_path(self.spill_dir,
+        if self.epochs[e] is None:
+            if self.builder is not None:                # device-resident
+                return self.builder(e)
+            return load_epoch_npz(spill_path(self.spill_dir,   # spilled
                                              self.worker, e))
         return self.epochs[e]
 
@@ -213,59 +275,99 @@ def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
                  compiler: str = "batched") -> EpochSchedule:
     if compiler == "batched":
         flat = sampler.sample_epoch_batched(s0, worker, e, train_nodes)
+    elif compiler == "device":
+        from repro.graph.device_sampler import sample_epoch_batched_device
+        flat = sample_epoch_batched_device(sampler, s0, worker, e,
+                                           train_nodes)
     elif compiler == "loop":
         flat = FlatEpoch.from_batches(
             sampler.sample_epoch(s0, worker, e, train_nodes), epoch=e,
             worker=worker, num_layers=len(sampler.fanouts))
     else:
         raise ValueError(f"unknown schedule compiler {compiler!r} "
-                         f"(expected 'batched' or 'loop')")
+                         f"(expected 'batched', 'device' or 'loop')")
     m_counts = flat.m_counts
     m_max = int(m_counts.max()) if m_counts.size else 0
     # frequency over the epoch: one count per batch containing the node
     # (N_i^e is a set; input_nodes are unique per batch, so one bincount
     # over the flat stream IS the per-batch indicator sum)
     remote = flat.input_nodes[pg.owner[flat.input_nodes] != worker]
-    if remote.size:
-        remote_ids, remote_freq = np.unique(remote, return_counts=True)
+    if compiler == "device":
+        from repro.graph.device_sampler import (device_remote_freq,
+                                                device_select_hot_set)
+        remote_ids, remote_freq = device_remote_freq(
+            remote, int(pg.graph.num_nodes))
+        cache_ids = device_select_hot_set(remote_ids, remote_freq, n_hot)
     else:
-        remote_ids = np.zeros(0, np.int64)
-        remote_freq = np.zeros(0, np.int64)
+        if remote.size:
+            remote_ids, remote_freq = np.unique(remote,
+                                                return_counts=True)
+        else:
+            remote_ids = np.zeros(0, np.int64)
+            remote_freq = np.zeros(0, np.int64)
+        cache_ids = select_hot_set(remote_ids, remote_freq, n_hot)
     return EpochSchedule(epoch=e, flat=flat, remote_ids=remote_ids,
-                         remote_freq=remote_freq,
-                         cache_ids=select_hot_set(remote_ids, remote_freq,
-                                                  n_hot),
+                         remote_freq=remote_freq, cache_ids=cache_ids,
                          m_max=m_max)
 
 
 def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
                    s0: int, num_epochs: int, n_hot: int,
                    spill_dir: Optional[str] = None,
-                   compiler: str = "batched") -> WorkerSchedule:
+                   compiler: str = "batched",
+                   lazy: bool = False) -> WorkerSchedule:
     """Paper Alg. 1 lines 1-3, for one worker.
 
     ``compiler`` picks the epoch sampler: ``"batched"`` (default) is the
-    vectorized whole-epoch compiler, ``"loop"`` the per-batch oracle --
-    both produce bit-identical schedules (the parity suites pin it)."""
+    vectorized whole-epoch compiler, ``"device"`` its accelerator port
+    (DESIGN.md §2.2), ``"loop"`` the per-batch oracle -- all three
+    produce bit-identical schedules (the parity suites pin it).
+
+    ``lazy=True`` is the device-resident mode: one metadata prepass
+    captures pad bounds + per-epoch maxima, then epoch PAYLOADS are
+    dropped and ``epoch(e)`` re-runs the deterministic compiler on
+    demand -- at most two epochs ever live in memory, and disk spill is
+    skipped entirely (the schedule re-materializes from (s0, w, e)
+    faster than an npz read-back on device). Spilled (non-lazy) builds
+    write their npz files on a background ``SpillWriter`` thread, so
+    epoch ``e``'s write overlaps epoch ``e+1``'s build."""
     local = pg.local_nodes[worker]
     tm = pg.graph.train_mask
     train_nodes = local[tm[local]] if tm is not None else local
+    if lazy:
+        spill_dir = None        # device-resident: no disk spill at all
     epochs: List[Optional[EpochSchedule]] = []
     epoch_meta: List[Tuple[int, List[int]]] = []
-    for e in range(num_epochs):
-        es = _build_epoch(sampler, pg, worker, s0, e, train_nodes, n_hot,
-                          compiler=compiler)
-        epoch_meta.append((es.m_max,
-                           epoch_edge_maxima(es,
-                                             num_layers=len(sampler.fanouts))))
-        if spill_dir is not None:
-            os.makedirs(spill_dir, exist_ok=True)
-            save_epoch_npz(spill_path(spill_dir, worker, e), es)
-            epochs.append(None)
-        else:
-            epochs.append(es)
+    writer: Optional[SpillWriter] = None
+    if spill_dir is not None:
+        os.makedirs(spill_dir, exist_ok=True)
+        writer = SpillWriter()
+    try:
+        for e in range(num_epochs):
+            es = _build_epoch(sampler, pg, worker, s0, e, train_nodes,
+                              n_hot, compiler=compiler)
+            epoch_meta.append(
+                (es.m_max,
+                 epoch_edge_maxima(es, num_layers=len(sampler.fanouts))))
+            if lazy:
+                epochs.append(None)     # payload rebuilt on demand
+            elif writer is not None:
+                writer.flush()          # epoch boundary: e-1's write done
+                writer.submit(spill_path(spill_dir, worker, e), es)
+                epochs.append(None)
+            else:
+                epochs.append(es)
+    finally:
+        if writer is not None:
+            writer.close()
+    builder: Optional[Callable[[int], EpochSchedule]] = None
+    if lazy:
+        def builder(e: int) -> EpochSchedule:
+            return _build_epoch(sampler, pg, worker, s0, e, train_nodes,
+                                n_hot, compiler=compiler)
     return WorkerSchedule(worker=worker, s0=s0, n_hot=n_hot, epochs=epochs,
-                          spill_dir=spill_dir, epoch_meta=epoch_meta)
+                          spill_dir=spill_dir, epoch_meta=epoch_meta,
+                          builder=builder)
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,9 @@ pair, everything written to ``artifacts/BENCH_paper.json``.
 oracle (``build_schedule(compiler="loop")``); the default is the
 vectorized epoch-at-once compiler -- schedules are bit-identical either
 way, so all differential checks must pass under both.
+``--schedule-backend device`` swaps every cell to the accelerator
+schedule compiler (DESIGN.md §2.2; device cells also go lazy/device-
+resident) -- same bit-parity contract, same all-checks-pass bar.
 ``--inject-miscount`` perturbs one cell's counters AFTER measurement --
 the differential layer must then fail and the CLI exit non-zero; this
 is the self-test proving the checks have teeth.
@@ -111,6 +114,10 @@ def main(argv=None) -> int:
     ap.add_argument("--loop-sampler", action="store_true",
                     help="build schedules with the per-batch oracle "
                          "sampler instead of the batched compiler")
+    ap.add_argument("--schedule-backend", choices=("numpy", "device"),
+                    default="numpy",
+                    help="where schedules compile: numpy (default) or "
+                         "the accelerator port of the epoch compiler")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="artifact path (default artifacts/"
                          "BENCH_paper.json)")
@@ -134,6 +141,13 @@ def main(argv=None) -> int:
             name=f"{spec.name}-loop",
             cells=tuple(dataclasses.replace(c, schedule_compiler="loop")
                         for c in spec.cells))
+    if args.schedule_backend != "numpy":
+        import dataclasses
+        spec = CampaignSpec(
+            name=f"{spec.name}-{args.schedule_backend}",
+            cells=tuple(dataclasses.replace(
+                c, schedule_backend=args.schedule_backend)
+                for c in spec.cells))
     report = run_campaign(
         spec, include_device=not args.host_only, out_path=args.out,
         log=print,

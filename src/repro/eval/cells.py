@@ -75,6 +75,9 @@ class CellResult:
     trace_count: int = 0
     device_cache_bytes: int = 0
     stage_time_s: float = 0.0
+    #: staging wall left exposed after training (device backend with
+    #: background staging; ~stage_time_s on the legacy synchronous path)
+    exposed_stage_s: float = 0.0
 
     @property
     def backend(self) -> str:
@@ -143,7 +146,7 @@ def run_host_cell(spec: CellSpec, worker: int = 0,
         ws = build_schedule(sampler, pg, worker=w, s0=spec.seed,
                             num_epochs=spec.epochs,
                             n_hot=spec.n_hot if spec.is_rapid else 0,
-                            compiler=spec.schedule_compiler)
+                            compiler=spec.effective_compiler)
         state = {"losses": [], "accs": []}
         if spec.train:
             params = init_params(cfg, jax.random.key(spec.seed))
@@ -306,9 +309,12 @@ def _build_device_scenario(spec: CellSpec) -> dict:
     pg = partition_graph(g, spec.workers, spec.partition_method)
     sampler = KHopSampler(g, fanouts=list(spec.fanouts),
                           batch_size=spec.batch_size)
+    # the device schedule backend also goes LAZY (device-resident): the
+    # runner's staging thread rebuilds each epoch overlapped with train
     schedules = [build_schedule(sampler, pg, worker=w, s0=spec.seed,
                                 num_epochs=spec.epochs, n_hot=spec.n_hot,
-                                compiler=spec.schedule_compiler)
+                                compiler=spec.effective_compiler,
+                                lazy=spec.schedule_backend == "device")
                  for w in range(spec.workers)]
     return {"g": g, "pg": pg, "schedules": schedules,
             "dv": DeviceView.build(pg),
@@ -373,4 +379,5 @@ def device_cell_result(spec: CellSpec, g, schedules, runner,
         epoch_metrics=rep_dicts,
         wire_rows=sum(int(r.wire_rows) for r in reports),
         trace_count=int(runner.trace_count),
-        stage_time_s=float(runner.stage_time_s))
+        stage_time_s=float(runner.stage_time_s),
+        exposed_stage_s=float(runner.exposed_stage_s))

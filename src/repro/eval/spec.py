@@ -48,6 +48,12 @@ class CellSpec:
     #: by the parity contract, so deliberately NOT part of
     #: ``scenario_key()`` -- cells differing only here still pair.
     schedule_compiler: str = "batched"
+    #: where the schedule compiler runs: "numpy" = host compilers as
+    #: picked by ``schedule_compiler``, "device" = the accelerator port
+    #: (DESIGN.md §2.2) with lazy device-resident schedules on the
+    #: device backend. Same bit-parity contract as ``schedule_compiler``,
+    #: so likewise EXCLUDED from ``scenario_key()``.
+    schedule_backend: str = "numpy"
 
     def __post_init__(self):
         if self.backend not in ("host", "device"):
@@ -59,11 +65,22 @@ class CellSpec:
         if self.schedule_compiler not in ("batched", "loop"):
             raise ValueError(f"unknown schedule_compiler "
                              f"{self.schedule_compiler!r}")
+        if self.schedule_backend not in ("numpy", "device"):
+            raise ValueError(f"unknown schedule_backend "
+                             f"{self.schedule_backend!r}")
         object.__setattr__(self, "fanouts", tuple(self.fanouts))
 
     @property
     def is_rapid(self) -> bool:
         return self.system == "rapidgnn"
+
+    @property
+    def effective_compiler(self) -> str:
+        """The ``build_schedule`` compiler this cell actually runs:
+        ``schedule_backend="device"`` overrides the host compiler choice
+        with the accelerator port."""
+        return ("device" if self.schedule_backend == "device"
+                else self.schedule_compiler)
 
     @property
     def partition_method(self) -> str:

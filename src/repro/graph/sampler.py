@@ -281,6 +281,11 @@ class KHopSampler:
         independent Philox stream seeded ``H(s0, w, e, i)`` (Prop 3.1
         demands it), so its draw is one blockwise ``Generator.integers``
         call on that stream, exactly the call ``sample_batch`` makes.
+
+        This numpy path doubles as the ORACLE for the accelerator port
+        (``graph.device_sampler.sample_epoch_batched_device``, DESIGN.md
+        §2.2), which moves the sort-bound middle on device and must stay
+        bit-identical to it.
         """
         g = self.graph
         L = len(self.fanouts)

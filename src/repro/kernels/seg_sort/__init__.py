@@ -1,0 +1,4 @@
+from repro.kernels.seg_sort.ops import (SEG_SORT_BACKENDS, seg_sort,
+                                        resolve_backend)
+
+__all__ = ["SEG_SORT_BACKENDS", "seg_sort", "resolve_backend"]

@@ -1,0 +1,50 @@
+"""Public wrapper for the segmented-key sort backends.
+
+Two interchangeable backends, bit-identical on the same inputs:
+
+  * ``"radix"`` -- the Pallas LSD radix kernel (TPU; ``interpret=True``
+    runs it anywhere for validation). Whole-vector VMEM residency, so
+    inputs past ``MAX_VMEM_N`` lanes fall back to ``"ref"``.
+  * ``"ref"``   -- ``jax.lax.sort`` (stable), the oracle the kernel's
+    parity suite pins and the CPU/GPU default.
+
+``backend="auto"`` resolves to ``"radix"`` on TPU and ``"ref"``
+elsewhere, mirroring the assemble/cache_lookup convention, so the
+device schedule compiler picks the right path per platform with no
+caller changes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.seg_sort.ref import seg_sort_ref
+from repro.kernels.seg_sort.seg_sort import MAX_VMEM_N, radix_sort
+
+SEG_SORT_BACKENDS = ("auto", "radix", "ref")
+
+
+def resolve_backend(backend: str, n: int = 0) -> str:
+    if backend not in SEG_SORT_BACKENDS:
+        raise ValueError(f"seg_sort backend {backend!r} not in "
+                         f"{SEG_SORT_BACKENDS}")
+    if backend == "auto":
+        backend = "radix" if jax.default_backend() == "tpu" else "ref"
+    if backend == "radix" and n > MAX_VMEM_N:
+        return "ref"            # key stream outgrew VMEM residency
+    return backend
+
+
+def seg_sort(keys: jax.Array, payload: Optional[jax.Array] = None, *,
+             num_bits: int = 31, backend: str = "auto",
+             interpret: bool = False
+             ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Stable ascending sort of non-negative int32 composite keys
+    (optional int32 payload permuted along). Sentinel-padded (INT32_MAX)
+    tails sort last under both backends."""
+    resolved = resolve_backend(backend, keys.shape[0])
+    if resolved == "radix":
+        return radix_sort(keys, payload, num_bits=num_bits,
+                          interpret=interpret)
+    return seg_sort_ref(keys, payload)

@@ -1,0 +1,26 @@
+"""jnp oracle for the segmented-key radix sort: ``jax.lax.sort``.
+
+The device schedule compiler sorts composite ``(batch, id)`` keys, so a
+single GLOBAL sort acts per batch (keys never cross segment boundaries
+-- the same trick the numpy compiler plays with ``np.unique``). Keys are
+int32, non-negative, padded with the INT32_MAX sentinel so padding sorts
+after every real key. ``is_stable=True`` keeps equal keys (only the
+sentinel pad tail, plus any payload-carrying duplicates) in input order,
+matching the radix kernel's LSD stability.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_sort_ref(keys: jax.Array, payload: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Sort int32 ``keys`` ascending; permute ``payload`` along with
+    them (stable). Returns ``(sorted_keys, sorted_payload_or_None)``."""
+    if payload is None:
+        return jax.lax.sort(keys, is_stable=True), None
+    ks, ps = jax.lax.sort((keys, payload), num_keys=1, is_stable=True)
+    return ks, ps

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: stable LSD radix sort for int32 composite keys.
+
+The device schedule compiler (DESIGN.md §2.2) is sort-bound exactly
+where the numpy compiler was: one whole-epoch sort of ``(batch, id)``
+composite keys per sampler layer. On the int32 key path those keys live
+in a known space ``[0, nb * span)``, so a least-significant-digit radix
+sort needs only ``ceil(log2(nb * span) / RADIX_BITS)`` passes over VMEM
+instead of a comparison sort's ``log2(n)`` -- the same radix-beats-
+comparison argument ``KEY_INT32_MAX_SLOTS`` encodes on the host.
+
+Layout: one grid step, the whole key (and optional payload) vector
+resident in VMEM -- epoch key streams are a few MB (≤ ``MAX_VMEM_N``
+int32 lanes), far under the ~16 MB/core budget. Each pass:
+
+  1. digit extraction  ``(k >> shift) & (RADIX - 1)``,
+  2. per-digit counts + exclusive prefix (the 16-way base offsets),
+  3. stable within-digit ranks via one masked cumsum per digit value,
+  4. reorder through a ``fori_loop`` of dynamic single-element stores
+     (``out_ref[pl.ds(pos, 1)]``  -- the supported dynamic-store form).
+
+Stability makes the sentinel pad tail (INT32_MAX, truncated to all-ones
+in every digit) stay behind real keys even when the key space is a
+power of two, and makes payload order deterministic under duplicate
+keys -- both load-bearing for the compiler's bit-parity contract.
+
+Host-side ``num_bits`` is STATIC (derived from the key-space bound), so
+pass count never depends on data.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RADIX_BITS = 4
+RADIX = 1 << RADIX_BITS
+
+#: whole-vector VMEM residency bound (int32 lanes): keys + payload +
+#: double buffer + positions ≈ 5 * 4 B * n must sit under ~16 MB/core.
+MAX_VMEM_N = 1 << 19
+
+
+def _radix_pass_kernel(k_ref, p_ref, ok_ref, op_ref, *, shift: int):
+    k = k_ref[...]
+    p = p_ref[...]
+    n = k.shape[0]
+    digit = jax.lax.shift_right_logical(k, shift) & (RADIX - 1)
+
+    # stable destination: base offset of the digit class + rank among
+    # equal digits before this element (one masked cumsum per class)
+    pos = jnp.zeros((n,), jnp.int32)
+    base = jnp.int32(0)
+    for d in range(RADIX):
+        m = digit == d
+        mi = m.astype(jnp.int32)
+        within = jnp.cumsum(mi) - 1
+        pos = jnp.where(m, base + within, pos)
+        base = base + jnp.sum(mi)
+
+    def body(i, _):
+        dst = jax.lax.dynamic_index_in_dim(pos, i, keepdims=False)
+        ok_ref[pl.ds(dst, 1)] = jax.lax.dynamic_slice_in_dim(k, i, 1)
+        op_ref[pl.ds(dst, 1)] = jax.lax.dynamic_slice_in_dim(p, i, 1)
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@partial(jax.jit, static_argnames=("num_bits", "interpret"))
+def radix_sort(keys: jax.Array, payload: Optional[jax.Array] = None, *,
+               num_bits: int = 31, interpret: bool = False
+               ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Stable ascending sort of non-negative int32 ``keys`` (and an
+    optional int32 ``payload`` riding along). ``num_bits`` bounds the
+    key space (sentinel-padded tails sort last by LSD stability even
+    truncated to ``num_bits``)."""
+    had_payload = payload is not None
+    if payload is None:
+        payload = jnp.zeros_like(keys)
+    n = keys.shape[0]
+    if n == 0:
+        return keys, payload if had_payload else None
+    passes = -(-max(num_bits, 1) // RADIX_BITS)
+    for p_i in range(passes):
+        keys, payload = pl.pallas_call(
+            partial(_radix_pass_kernel, shift=p_i * RADIX_BITS),
+            out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                       jax.ShapeDtypeStruct((n,), jnp.int32)],
+            interpret=interpret,
+        )(keys.astype(jnp.int32), payload.astype(jnp.int32))
+    return keys, payload if had_payload else None

@@ -56,6 +56,13 @@ def test_checkpoint_resume_through_device_runner():
     assert "checkpoint_resume OK" in _run("checkpoint")
 
 
+def test_overlapped_staging_bit_consistent():
+    """Lazy device-compiled schedules staged by the background thread:
+    bit-consistent with a cold eager build, one XLA trace, loss curve
+    equal to the eager runner, overlap accounting recorded."""
+    assert "overlapped_staging OK" in _run("overlap")
+
+
 def test_moe_expert_parallel_matches_single_device():
     assert "moe_expert_parallel OK" in _run("moe")
 
