@@ -1,0 +1,21 @@
+"""``repro.analysis``: the AST invariant checker (DESIGN.md §8).
+
+A stdlib-only static-analysis gate enforcing the repo's determinism
+contracts at lint time, before any test runs:
+
+    python -m repro.analysis src --strict
+
+Rules: RNG-CONTRACT, TRACE-PURITY, KERNEL-LAYOUT, THREAD-DISCIPLINE,
+SPILL-SAFETY. Violations print as ``path:line:col RULE-ID message``
+and are waivable inline with
+``# repro: allow(RULE-ID) -- justification``.
+"""
+from repro.analysis.engine import (AnalysisResult, Finding,
+                                   ModuleContext, Rule, RuleVisitor,
+                                   analyze_paths)
+from repro.analysis.imports import build_import_report
+from repro.analysis.rules import ALL_RULES, RULE_IDS
+
+__all__ = ["AnalysisResult", "Finding", "ModuleContext", "Rule",
+           "RuleVisitor", "analyze_paths", "build_import_report",
+           "ALL_RULES", "RULE_IDS"]

@@ -1,0 +1,76 @@
+"""CLI for the invariant checker.
+
+    python -m repro.analysis src --strict            # CI hard gate
+    python -m repro.analysis tests benchmarks        # report mode
+    python -m repro.analysis src --report-dead       # import graph
+    python -m repro.analysis src --strict --max-seconds 10
+
+Exit codes: 0 clean (or report mode), 1 unwaived findings under
+``--strict``, 2 wall-time budget exceeded.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.engine import analyze_paths
+from repro.analysis.imports import DEFAULT_ROOTS, build_import_report
+from repro.analysis.rules import ALL_RULES, RULE_IDS
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant checker for the determinism "
+                    "contracts (DESIGN.md §8)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/dirs to scan (default: src)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unwaived finding (the CI gate)")
+    ap.add_argument("--rules", default=None,
+                    help=f"comma-separated subset of {RULE_IDS}")
+    ap.add_argument("--report-dead", action="store_true",
+                    help="also print the import-graph dead-module "
+                         "inventory (roots: %s)" % ", ".join(DEFAULT_ROOTS))
+    ap.add_argument("--roots", default=None,
+                    help="override --report-dead root prefixes "
+                         "(comma-separated dotted names)")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="exit 2 if the scan takes longer than this")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src"]
+
+    rules = ALL_RULES
+    if args.rules:
+        want = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = want - set(RULE_IDS)
+        if unknown:
+            ap.error(f"unknown rules {sorted(unknown)}; "
+                     f"known: {RULE_IDS}")
+        rules = tuple(r for r in ALL_RULES if r.rule_id in want)
+
+    res = analyze_paths(paths, rules=rules)
+    for f in res.findings:
+        print(f.format())
+    mode = "strict" if args.strict else "report"
+    print(f"repro.analysis [{mode}]: {len(res.findings)} finding(s) "
+          f"({res.waived} waived) across {res.files_scanned} files "
+          f"in {res.elapsed_s:.2f}s")
+
+    if args.report_dead:
+        roots = tuple(r.strip() for r in args.roots.split(",")) \
+            if args.roots else DEFAULT_ROOTS
+        for p in paths:
+            print(build_import_report(p, roots=roots).format())
+
+    if args.max_seconds is not None and res.elapsed_s > args.max_seconds:
+        print(f"repro.analysis: wall time {res.elapsed_s:.2f}s exceeds "
+              f"budget {args.max_seconds:.2f}s", file=sys.stderr)
+        return 2
+    if args.strict and res.findings:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""The rule engine: file discovery, per-module AST models, rule driver.
+
+Stdlib-only by design (``ast`` + ``tokenize``): the checker runs as a
+CI gate before any heavyweight import, so it must never pay (or
+require) a numpy/jax import. Each scanned file becomes a
+``ModuleContext`` -- parsed tree, parent links, import-alias table,
+waivers -- shared by every rule; rules are ``ast.NodeVisitor``
+subclasses (see ``RuleVisitor``) yielding ``Finding`` records, plus an
+optional whole-tree pass for layout-shaped contracts
+(``Rule.check_project``). DESIGN.md §8 documents the catalog.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.waivers import Waiver, apply_waivers, parse_waivers
+
+PARSE_RULE = "PARSE-ERROR"
+
+#: builtins rules reason about; resolve() maps them to themselves so
+#: ``int(x)`` and ``print(...)`` get canonical names like imports do
+_BUILTINS = {"int", "float", "bool", "print", "open", "input", "len",
+             "exec", "eval", "breakpoint"}
+
+
+def build_aliases(tree: ast.AST) -> Dict[str, str]:
+    """name-in-scope -> canonical dotted module path, from every
+    import statement in the file (nested ones included: lazy imports
+    inside functions are how this repo dodges cycles)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    root = a.name.split(".")[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+class ModuleContext:
+    """Everything the rules need about one file, built exactly once."""
+
+    def __init__(self, display_path: str, abspath: str, source: str):
+        self.path = display_path
+        self.abspath = abspath
+        self.posix = abspath.replace(os.sep, "/")
+        self.source = source
+        self.tree = ast.parse(source)
+        self.aliases = build_aliases(self.tree)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.waivers: List[Waiver] = []
+
+    # -- canonical-name resolution ------------------------------------
+
+    def resolve(self, node: Optional[ast.AST]) -> Optional[str]:
+        """Expression -> canonical dotted name ('numpy.random.seed',
+        'jax.lax.scan', builtin 'int'), or None when not statically
+        resolvable (locals, call results, subscripts...)."""
+        if isinstance(node, ast.Name):
+            if node.id in self.aliases:
+                return self.aliases[node.id]
+            if node.id in _BUILTINS:
+                return node.id
+            return None
+        if isinstance(node, ast.Attribute):
+            base = self.resolve(node.value)
+            return f"{base}.{node.attr}" if base else None
+        return None
+
+    def in_file(self, *suffixes: str) -> bool:
+        """Does this module live at one of the given path suffixes?
+        Matched on the absolute posix path, so sanctioned-location
+        checks survive tmp-dir copies in tests."""
+        return any(self.posix.endswith(s) for s in suffixes)
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(path=self.path, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), rule=rule,
+                       message=message)
+
+
+class RuleVisitor(ast.NodeVisitor):
+    """Base visitor handed the module model; rules collect into
+    ``self.found``."""
+
+    def __init__(self, rule: "Rule", ctx: ModuleContext):
+        self.rule = rule
+        self.ctx = ctx
+        self.found: List[Finding] = []
+
+    def flag(self, node: ast.AST, message: str) -> None:
+        self.found.append(
+            self.ctx.finding(node, self.rule.rule_id, message))
+
+
+class Rule:
+    """One invariant. ``check_module`` runs per file;
+    ``check_project`` once over the whole scanned tree (for contracts
+    about files-that-must-exist rather than code-that-must-not)."""
+
+    rule_id: str = "RULE"
+    description: str = ""
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self,
+                      ctxs: Sequence[ModuleContext]) -> Iterable[Finding]:
+        return ()
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]
+    waived: int
+    files_scanned: int
+    elapsed_s: float
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def discover(paths: Sequence[str]) -> List[Tuple[str, str]]:
+    """paths (files or dirs) -> sorted [(display_path, abspath)] of
+    .py files; hidden dirs and __pycache__ skipped."""
+    out: List[Tuple[str, str]] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append((p, os.path.abspath(p)))
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    disp = os.path.join(root, f)
+                    out.append((disp, os.path.abspath(disp)))
+    return sorted(set(out))
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Sequence[Rule]] = None) -> AnalysisResult:
+    """Run the catalog over every .py under ``paths`` and apply
+    waivers. Unparseable files surface as PARSE-ERROR findings rather
+    than aborting the scan."""
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = ALL_RULES
+    t0 = time.perf_counter()
+    findings: List[Finding] = []
+    ctxs: List[ModuleContext] = []
+    waivers_by_path: Dict[str, List[Waiver]] = {}
+    files = discover(paths)
+    for disp, abspath in files:
+        with open(abspath, "r", encoding="utf-8") as f:
+            source = f.read()
+        try:
+            ctx = ModuleContext(disp, abspath, source)
+        except SyntaxError as exc:
+            findings.append(Finding(
+                path=disp, line=exc.lineno or 1, col=exc.offset or 0,
+                rule=PARSE_RULE, message=f"cannot parse: {exc.msg}"))
+            continue
+        ws, wfinds = parse_waivers(source, disp)
+        ctx.waivers = ws
+        waivers_by_path[disp] = ws
+        findings.extend(wfinds)
+        ctxs.append(ctx)
+    for ctx in ctxs:
+        for rule in rules:
+            findings.extend(rule.check_module(ctx))
+    for rule in rules:
+        findings.extend(rule.check_project(ctxs))
+    kept, waived = apply_waivers(findings, waivers_by_path)
+    return AnalysisResult(findings=sorted(kept), waived=waived,
+                          files_scanned=len(files),
+                          elapsed_s=time.perf_counter() - t0)

@@ -1,0 +1,27 @@
+"""Finding records and report formatting for the invariant checker.
+
+One ``Finding`` per contract violation, rendered compiler-style as
+``path:line:col RULE-ID message`` so editors and CI logs can jump
+straight to the site (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str       # display path (as discovered, e.g. src/repro/...)
+    line: int       # 1-based
+    col: int        # 0-based, as ast reports
+    rule: str       # RULE-ID, e.g. "RNG-CONTRACT"
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col} {self.rule} " \
+               f"{self.message}"
+
+
+def render(findings: List[Finding]) -> str:
+    return "\n".join(f.format() for f in sorted(findings))

@@ -1,0 +1,122 @@
+"""Import-graph reachability report (``--report-dead``).
+
+Builds the ``repro.*`` module graph purely from ``ast`` import
+statements (nested/lazy imports included) and computes which modules
+are unreachable from the live entry surfaces. Inventory only -- the
+report never deletes anything; DESIGN.md's appendix records the
+current dead set.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Sequence, Set, Tuple
+
+#: the live entry surfaces: the distributed trainer, the paper-metrics
+#: campaign, the graph substrate -- plus this tool itself.
+DEFAULT_ROOTS = ("repro.dist", "repro.eval", "repro.graph",
+                 "repro.analysis")
+
+
+@dataclasses.dataclass
+class ImportReport:
+    modules: Dict[str, str]          # dotted name -> display path
+    edges: Dict[str, Set[str]]       # importer -> imported (repro.* only)
+    roots: List[str]                 # root module names (expanded)
+    reachable: Set[str]
+    dead: List[str]                  # sorted unreachable module names
+
+    def format(self) -> str:
+        lines = [f"import graph: {len(self.modules)} modules, "
+                 f"{sum(len(v) for v in self.edges.values())} edges, "
+                 f"{len(self.roots)} root modules "
+                 f"({len(self.reachable)} reachable)"]
+        if self.dead:
+            lines.append(f"dead modules (unreachable from "
+                         f"{', '.join(sorted(set(DEFAULT_ROOTS)))}):")
+            lines += [f"  {m}  ({self.modules[m]})" for m in self.dead]
+        else:
+            lines.append("no dead modules")
+        return "\n".join(lines)
+
+
+def _module_name(relposix: str) -> str:
+    """'repro/graph/sampler.py' -> 'repro.graph.sampler';
+    package __init__ maps to the package itself."""
+    mod = relposix[:-3].replace("/", ".")
+    if mod.endswith(".__init__"):
+        mod = mod[: -len(".__init__")]
+    return mod
+
+
+def build_import_report(path: str,
+                        roots: Sequence[str] = DEFAULT_ROOTS
+                        ) -> ImportReport:
+    """``path`` is the scan root holding the ``repro`` package (e.g.
+    ``src``); ``roots`` are dotted prefixes whose modules seed the
+    reachability closure."""
+    modules: Dict[str, str] = {}
+    trees: Dict[str, ast.AST] = {}
+    for dirpath, dirs, files in os.walk(path):
+        dirs[:] = [d for d in dirs
+                   if not d.startswith(".") and d != "__pycache__"]
+        for f in sorted(files):
+            if not f.endswith(".py"):
+                continue
+            disp = os.path.join(dirpath, f)
+            rel = os.path.relpath(disp, path).replace(os.sep, "/")
+            mod = _module_name(rel)
+            if not mod.startswith("repro"):
+                continue
+            modules[mod] = disp
+            with open(disp, "r", encoding="utf-8") as fh:
+                try:
+                    trees[mod] = ast.parse(fh.read())
+                except SyntaxError:
+                    continue
+
+    def resolve_dep(name: str) -> List[str]:
+        """Dotted import target -> existing module(s): the module
+        itself if present, else walk up to the nearest package."""
+        parts = name.split(".")
+        while parts:
+            cand = ".".join(parts)
+            if cand in modules:
+                return [cand]
+            parts = parts[:-1]
+        return []
+
+    edges: Dict[str, Set[str]] = {m: set() for m in modules}
+    for mod, tree in trees.items():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("repro"):
+                        edges[mod].update(resolve_dep(a.name))
+            elif isinstance(node, ast.ImportFrom) and node.module and \
+                    node.level == 0 and node.module.startswith("repro"):
+                edges[mod].update(resolve_dep(node.module))
+                for a in node.names:
+                    # 'from repro.graph import sampler' pulls a module
+                    edges[mod].update(
+                        resolve_dep(f"{node.module}.{a.name}"))
+        # importing a package executes its __init__
+        pkg = mod.rsplit(".", 1)[0] if "." in mod else None
+        if pkg and pkg in modules:
+            edges[mod].add(pkg)
+
+    root_mods = sorted(m for m in modules
+                       if any(m == r or m.startswith(r + ".")
+                              for r in roots))
+    reachable: Set[str] = set()
+    stack = list(root_mods)
+    while stack:
+        m = stack.pop()
+        if m in reachable:
+            continue
+        reachable.add(m)
+        stack.extend(edges.get(m, ()))
+    dead = sorted(m for m in modules if m not in reachable)
+    return ImportReport(modules=modules, edges=edges, roots=root_mods,
+                        reachable=reachable, dead=dead)

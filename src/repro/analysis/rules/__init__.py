@@ -1,0 +1,19 @@
+"""The invariant catalog (DESIGN.md §8): one rule per contract."""
+from repro.analysis.rules.rng_contract import RngContractRule
+from repro.analysis.rules.trace_purity import TracePurityRule
+from repro.analysis.rules.kernel_layout import KernelLayoutRule
+from repro.analysis.rules.thread_discipline import ThreadDisciplineRule
+from repro.analysis.rules.spill_safety import SpillSafetyRule
+
+ALL_RULES = (
+    RngContractRule(),
+    TracePurityRule(),
+    KernelLayoutRule(),
+    ThreadDisciplineRule(),
+    SpillSafetyRule(),
+)
+
+RULE_IDS = tuple(r.rule_id for r in ALL_RULES)
+
+__all__ = ["ALL_RULES", "RULE_IDS", "RngContractRule", "TracePurityRule",
+           "KernelLayoutRule", "ThreadDisciplineRule", "SpillSafetyRule"]

@@ -1,0 +1,94 @@
+"""KERNEL-LAYOUT: every kernel family ships the ops/ref/impl triple,
+and Pallas never leaks out of ``kernels/``.
+
+The repo's kernel contract (DESIGN.md §3): each ``kernels/<family>/``
+directory exposes ``ops.py`` (the jit'd public wrapper with an
+interpret-mode backend so CPU CI can validate it), ``ref.py`` (the
+pure-jnp oracle the parity suites pin the kernel to), and
+``<family>.py`` (the Pallas implementation). ``pl.pallas_call``
+outside ``kernels/`` would create an un-oracled, un-interpretable
+kernel -- the exact structure the differential tests exist to prevent.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Sequence
+
+from repro.analysis.engine import (Finding, ModuleContext, Rule,
+                                   RuleVisitor)
+
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+
+
+class _Visitor(RuleVisitor):
+    def visit_Call(self, node: ast.Call) -> None:
+        canon = self.ctx.resolve(node.func)
+        is_pallas = canon == _PALLAS_CALL or (
+            canon is None and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "pallas_call")
+        if is_pallas and "/kernels/" not in self.ctx.posix:
+            self.flag(node, "pl.pallas_call outside kernels/: kernels "
+                            "live in kernels/<family>/ with the "
+                            "ops.py/ref.py/impl triple (DESIGN.md §3)")
+        self.generic_visit(node)
+
+
+class KernelLayoutRule(Rule):
+    rule_id = "KERNEL-LAYOUT"
+    description = ("kernels/<family>/ must expose ops.py + ref.py + "
+                   "<family>.py with an interpret-mode backend; "
+                   "pl.pallas_call only under kernels/")
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        v = _Visitor(self, ctx)
+        v.visit(ctx.tree)
+        return v.found
+
+    def check_project(self,
+                      ctxs: Sequence[ModuleContext]) -> Iterable[Finding]:
+        # group scanned files into kernel families by directory
+        families: Dict[str, List[ModuleContext]] = {}
+        for ctx in ctxs:
+            parts = ctx.posix.split("/")
+            if "kernels" in parts[:-1]:
+                ki = parts.index("kernels")
+                if ki + 2 < len(parts):       # kernels/<family>/<file>
+                    families.setdefault(
+                        "/".join(parts[:ki + 2]), []).append(ctx)
+        found: List[Finding] = []
+        for famdir, members in sorted(families.items()):
+            family = famdir.rsplit("/", 1)[1]
+            names = {os.path.basename(c.posix): c for c in members}
+            anchor = members[0]
+            for required in ("ops.py", "ref.py", f"{family}.py"):
+                if required not in names:
+                    found.append(Finding(
+                        path=anchor.path, line=1, col=0,
+                        rule=self.rule_id,
+                        message=f"kernel family '{family}' is missing "
+                                f"{required} (ops/ref/impl triple, "
+                                f"DESIGN.md §3)"))
+            ops = names.get("ops.py")
+            if ops is not None and not self._has_interpret(ops):
+                found.append(Finding(
+                    path=ops.path, line=1, col=0, rule=self.rule_id,
+                    message=f"kernel family '{family}' ops.py exposes "
+                            f"no interpret-mode backend (needed for "
+                            f"CPU parity CI)"))
+        return found
+
+    @staticmethod
+    def _has_interpret(ctx: ModuleContext) -> bool:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.keyword) and \
+                    node.arg == "interpret":
+                return True
+            if isinstance(node, ast.arg) and node.arg == "interpret":
+                return True
+            if isinstance(node, ast.Constant) and \
+                    node.value == "interpret":
+                return True
+            if isinstance(node, ast.Name) and node.id == "interpret":
+                return True
+        return False

@@ -1,0 +1,78 @@
+"""RNG-CONTRACT: all randomness flows through the sanctioned Philox
+block in ``repro/graph/sampler.py``.
+
+The paper's §2.2 bit-exactness contract (Prop 3.1) keys every stream
+as ``H(s0, w, e, i)`` via ``derive_seed``/``rng_from``; the cache
+construction and prefetch schedule are only replayable because no
+other generator exists. A stray ``np.random.default_rng(...)`` (or
+worse, the global ``np.random.seed`` / stdlib ``random``) introduces a
+stream whose consumption depends on call order -- exactly the
+PR-6 ``Generator.integers`` rejection-sampling trap generalized
+(DESIGN.md §8). Construction therefore happens in one file; everybody
+else calls ``rng_from(...)`` or receives a Generator.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import (Finding, ModuleContext, Rule,
+                                   RuleVisitor)
+
+#: the one file allowed to touch numpy.random directly
+SANCTIONED = ("repro/graph/sampler.py",)
+
+#: RNG constructors whose seed argument must never be wall-clock
+_SEEDED = {"numpy.random.default_rng", "numpy.random.seed",
+           "numpy.random.Philox", "numpy.random.Generator",
+           "repro.graph.sampler.rng_from",
+           "repro.graph.sampler.derive_seed"}
+
+_TIME_SOURCES = {"time.time", "time.time_ns", "time.monotonic",
+                 "time.perf_counter", "time.process_time"}
+
+
+class _Visitor(RuleVisitor):
+    def __init__(self, rule, ctx, sanctioned_file: bool):
+        super().__init__(rule, ctx)
+        self.sanctioned_file = sanctioned_file
+
+    def visit_Call(self, node: ast.Call) -> None:
+        canon = self.ctx.resolve(node.func)
+        if canon:
+            if canon in _SEEDED:
+                for arg in ast.walk(node):
+                    if isinstance(arg, ast.Call) and \
+                            self.ctx.resolve(arg.func) in _TIME_SOURCES:
+                        self.flag(node, f"time-seeded RNG "
+                                        f"({canon} seeded from "
+                                        f"{self.ctx.resolve(arg.func)}) "
+                                        f"is unreplayable; derive seeds "
+                                        f"via rng_from(s0, ...)")
+                        break
+            if not self.sanctioned_file:
+                if canon == "numpy.random" or \
+                        canon.startswith("numpy.random."):
+                    self.flag(node, f"{canon} outside the sanctioned "
+                                    f"Philox block "
+                                    f"(repro/graph/sampler.py); use "
+                                    f"rng_from(s0, ...) so the stream "
+                                    f"is keyed by H(s0, fields) "
+                                    f"(paper §2.2)")
+                elif canon == "random" or canon.startswith("random."):
+                    self.flag(node, f"stdlib {canon} is process-global "
+                                    f"and unkeyed; use rng_from(s0, "
+                                    f"...) from repro/graph/sampler.py")
+        self.generic_visit(node)
+
+
+class RngContractRule(Rule):
+    rule_id = "RNG-CONTRACT"
+    description = ("randomness must come from the sanctioned Philox "
+                   "block (graph/sampler.py rng_from); no np.random / "
+                   "stdlib random / time-seeded generators elsewhere")
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        v = _Visitor(self, ctx, sanctioned_file=ctx.in_file(*SANCTIONED))
+        v.visit(ctx.tree)
+        return v.found

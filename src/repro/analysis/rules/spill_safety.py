@@ -1,0 +1,62 @@
+"""SPILL-SAFETY: the npz spill surface stays flat, un-pickled, and in
+one place.
+
+Schedules spill as plain ndarray blocks (``core/schedule.py``,
+DESIGN.md §2.1): no pickled object graphs, so a spill file can never
+execute code on load and always reloads without per-batch
+reconstruction. ``allow_pickle=True`` anywhere -- or an
+``np.save``/``np.load`` call sprouting outside the sanctioned spill
+module -- reopens both holes, so both are flagged (waiver required
+for deliberate, documented exceptions like the checkpoint shards).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import Finding, ModuleContext, Rule, RuleVisitor
+
+SANCTIONED = ("repro/core/schedule.py",)
+
+_NP_IO = {"numpy.save", "numpy.load", "numpy.savez",
+          "numpy.savez_compressed"}
+_PICKLE = {"pickle.dump", "pickle.dumps", "pickle.load", "pickle.loads",
+           "dill.dump", "dill.dumps", "dill.load", "dill.loads"}
+
+
+class _Visitor(RuleVisitor):
+    def __init__(self, rule, ctx, sanctioned_file: bool):
+        super().__init__(rule, ctx)
+        self.sanctioned_file = sanctioned_file
+
+    def visit_Call(self, node: ast.Call) -> None:
+        for k in node.keywords:
+            if k.arg == "allow_pickle" and \
+                    isinstance(k.value, ast.Constant) and \
+                    k.value.value is True:
+                self.flag(node, "allow_pickle=True: spill/checkpoint "
+                                "files must stay flat ndarray blocks "
+                                "(arbitrary-code-on-load hazard)")
+        canon = self.ctx.resolve(node.func)
+        if canon and not self.sanctioned_file:
+            if canon in _NP_IO:
+                self.flag(node, f"{canon} outside the sanctioned "
+                                f"spill module repro/core/schedule.py; "
+                                f"route array IO through the flat npz "
+                                f"spill format (DESIGN.md §2.1)")
+            elif canon in _PICKLE:
+                self.flag(node, f"{canon}: pickled object graphs are "
+                                f"banned from the spill/checkpoint "
+                                f"surface")
+        self.generic_visit(node)
+
+
+class SpillSafetyRule(Rule):
+    rule_id = "SPILL-SAFETY"
+    description = ("no allow_pickle=True anywhere; np.save/np.load "
+                   "only inside core/schedule.py")
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        v = _Visitor(self, ctx, sanctioned_file=ctx.in_file(*SANCTIONED))
+        v.visit(ctx.tree)
+        return v.found

@@ -1,0 +1,287 @@
+"""THREAD-DISCIPLINE: background threads are owned, joined, and
+propagate their failures.
+
+Three background workers keep the training critical path clear --
+``core/schedule.py`` SpillWriter, the ``core/prefetch.py`` producer
+pair, and the runner's staging executor -- and each earned the same
+hard-won shape: a handle somebody joins, a broad exception capture in
+the target (a daemon thread that dies silently turns into a consumer
+blocked forever), and lock- or queue-mediated shared state. This rule
+pins that shape (DESIGN.md §8):
+
+  * ``threading.Thread(daemon=True)`` not stored on an owner with a
+    ``.join()`` path is flagged (a fire-and-forget daemon);
+  * a resolvable thread ``target`` whose body has no broad
+    ``try/except`` is flagged (exceptions must be captured and
+    re-raised on the submitting side);
+  * a ``self.<attr>`` written inside the target and read from other
+    methods is flagged unless the class takes a ``threading.Lock`` (or
+    the traffic rides a ``queue.Queue``);
+  * a ``ThreadPoolExecutor`` outside a ``with`` block with no
+    ``.shutdown`` call in the file is flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+_THREAD = "threading.Thread"
+_EXECUTOR_SUFFIXES = ("ThreadPoolExecutor", "ProcessPoolExecutor")
+_MEDIATED = {"queue.Queue", "queue.SimpleQueue", "queue.LifoQueue",
+             "queue.PriorityQueue", "threading.Lock", "threading.RLock",
+             "threading.Event", "threading.Condition",
+             "threading.Semaphore", "threading.BoundedSemaphore"}
+
+
+def _kw(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in node.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _broad_capture(fn: ast.AST) -> bool:
+    """Does the function body contain a try with a bare / Exception /
+    BaseException handler?"""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.ExceptHandler):
+            if node.type is None:
+                return True
+            t = node.type
+            names = t.elts if isinstance(t, ast.Tuple) else [t]
+            for n in names:
+                base = n.attr if isinstance(n, ast.Attribute) else \
+                    getattr(n, "id", None)
+                if base in ("Exception", "BaseException"):
+                    return True
+    return False
+
+
+class _ClassModel:
+    def __init__(self, node: ast.ClassDef):
+        self.node = node
+        self.methods: Dict[str, ast.AST] = {
+            m.name: m for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    def self_attr_calls(self, attr: str, method_filter=None) -> bool:
+        """Does any method call ``self.<attr>.<anything>`` -- e.g. a
+        ``self._t.join(...)``?  ``attr='_t.join'`` style: pass the
+        attribute chain as 'X' and the method name separately."""
+        raise NotImplementedError
+
+    def calls_join_on(self, attr: str) -> bool:
+        for m in self.methods.values():
+            for node in ast.walk(m):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "join":
+                    rcv = node.func.value
+                    if isinstance(rcv, ast.Attribute) and \
+                            rcv.attr == attr and \
+                            isinstance(rcv.value, ast.Name) and \
+                            rcv.value.id == "self":
+                        return True
+        return False
+
+    def has_lock(self, ctx: ModuleContext) -> bool:
+        for node in ast.walk(self.node):
+            if isinstance(node, ast.Call) and ctx.resolve(node.func) in (
+                    "threading.Lock", "threading.RLock"):
+                return True
+        return False
+
+    def mediated_attrs(self, ctx: ModuleContext) -> Set[str]:
+        """self attrs initialized to queue/lock primitives anywhere in
+        the class."""
+        out: Set[str] = set()
+        for node in ast.walk(self.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    ctx.resolve(node.value.func) in _MEDIATED:
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        out.add(t.attr)
+        return out
+
+    def attr_writes(self, method: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(method):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    for e in ([t] + list(getattr(t, "elts", []))):
+                        if isinstance(e, ast.Attribute) and \
+                                isinstance(e.value, ast.Name) and \
+                                e.value.id == "self":
+                            out.add(e.attr)
+        return out
+
+    def attr_reads(self, method: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(method):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id == "self":
+                out.add(node.attr)
+        return out
+
+
+class ThreadDisciplineRule(Rule):
+    rule_id = "THREAD-DISCIPLINE"
+    description = ("background threads need a join-able owner with "
+                   "exception propagation; thread-written shared "
+                   "attrs need a Lock or queue")
+
+    def check_module(self, ctx: ModuleContext) -> Iterable[Finding]:
+        found: List[Finding] = []
+        classes = {n: _ClassModel(n) for n in ast.walk(ctx.tree)
+                   if isinstance(n, ast.ClassDef)}
+
+        def owning_class(node: ast.AST) -> Optional[_ClassModel]:
+            cur = ctx.parents.get(node)
+            while cur is not None:
+                if isinstance(cur, ast.ClassDef):
+                    return classes[cur]
+                cur = ctx.parents.get(cur)
+            return None
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            canon = ctx.resolve(node.func)
+            if canon == _THREAD:
+                found.extend(self._check_thread(node, ctx,
+                                                owning_class(node)))
+            elif canon and canon.endswith(_EXECUTOR_SUFFIXES):
+                found.extend(self._check_executor(node, ctx))
+        return found
+
+    # -- threading.Thread(...) ----------------------------------------
+
+    def _check_thread(self, node: ast.Call, ctx: ModuleContext,
+                      cls: Optional[_ClassModel]) -> List[Finding]:
+        found: List[Finding] = []
+        daemon = _kw(node, "daemon")
+        is_daemon = isinstance(daemon, ast.Constant) and \
+            daemon.value is True
+        parent = ctx.parents.get(node)
+
+        stored_attr: Optional[str] = None
+        stored_name: Optional[str] = None
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+            t = parent.targets[0]
+            if isinstance(t, ast.Attribute) and \
+                    isinstance(t.value, ast.Name) and t.value.id == "self":
+                stored_attr = t.attr
+            elif isinstance(t, ast.Name):
+                stored_name = t.id
+
+        if stored_attr is not None and cls is not None:
+            if not cls.calls_join_on(stored_attr):
+                found.append(ctx.finding(
+                    node, self.rule_id,
+                    f"thread handle self.{stored_attr} is never "
+                    f"joined; expose a close()/join() path"))
+            found.extend(self._check_target(node, ctx, cls))
+            found.extend(self._check_shared_state(node, ctx, cls))
+        elif stored_name is not None:
+            fn = self._enclosing_fn(node, ctx)
+            if not (fn is not None
+                    and self._local_join(fn, stored_name)):
+                if is_daemon:
+                    found.append(ctx.finding(
+                        node, self.rule_id,
+                        f"daemon thread '{stored_name}' has no local "
+                        f"join path; own it with a join-able handle"))
+        elif is_daemon:
+            found.append(ctx.finding(
+                node, self.rule_id,
+                "bare daemon thread: not stored on any owner, "
+                "cannot be joined, failures die silently"))
+        return found
+
+    def _check_target(self, node: ast.Call, ctx: ModuleContext,
+                      cls: _ClassModel) -> List[Finding]:
+        target = _kw(node, "target")
+        method: Optional[ast.AST] = None
+        if isinstance(target, ast.Attribute) and \
+                isinstance(target.value, ast.Name) and \
+                target.value.id == "self":
+            method = cls.methods.get(target.attr)
+        if method is not None and not _broad_capture(method):
+            return [ctx.finding(
+                node, self.rule_id,
+                f"thread target '{method.name}' has no broad "
+                f"exception capture; a failure dies silently instead "
+                f"of re-raising on the submitting side")]
+        return []
+
+    def _check_shared_state(self, node: ast.Call, ctx: ModuleContext,
+                            cls: _ClassModel) -> List[Finding]:
+        target = _kw(node, "target")
+        if not (isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"):
+            return []
+        method = cls.methods.get(target.attr)
+        if method is None or cls.has_lock(ctx):
+            return []
+        mediated = cls.mediated_attrs(ctx)
+        writes = cls.attr_writes(method) - mediated
+        if not writes:
+            return []
+        read_elsewhere: Set[str] = set()
+        for name, m in cls.methods.items():
+            if m is method:
+                continue
+            read_elsewhere |= cls.attr_reads(m)
+        shared = sorted(writes & read_elsewhere)
+        return [ctx.finding(
+            node, self.rule_id,
+            f"attr self.{a} is written by thread target "
+            f"'{method.name}' and read from the main path with no "
+            f"threading.Lock in the class") for a in shared]
+
+    # -- executors ------------------------------------------------------
+
+    def _check_executor(self, node: ast.Call,
+                        ctx: ModuleContext) -> List[Finding]:
+        parent = ctx.parents.get(node)
+        if isinstance(parent, ast.withitem):
+            return []
+        # assigned somewhere + a .shutdown( anywhere in the file: ok
+        if ".shutdown(" in ctx.source:
+            return []
+        return [ctx.finding(
+            node, self.rule_id,
+            "executor outside a 'with' block and no .shutdown() in "
+            "file; worker threads leak past the owning scope")]
+
+    # -- helpers --------------------------------------------------------
+
+    @staticmethod
+    def _enclosing_fn(node: ast.AST, ctx: ModuleContext):
+        cur = ctx.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = ctx.parents.get(cur)
+        return None
+
+    @staticmethod
+    def _local_join(fn: ast.AST, name: str) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "join" and \
+                    isinstance(node.func.value, ast.Name) and \
+                    node.func.value.id == name:
+                return True
+        return False

@@ -1,0 +1,90 @@
+"""Inline waiver syntax for the invariant checker.
+
+    some_call()   # repro: allow(RULE-ID) -- why this is safe here
+
+A waiver suppresses findings of exactly that RULE-ID on exactly one
+line: the comment's own line when it trails code, or the line
+immediately below when the comment stands alone. The justification
+after ``--`` is REQUIRED -- a waiver without one is itself a finding
+(``WAIVER-SYNTAX``), so every suppression in the tree documents why
+the contract does not apply (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+
+WAIVER_RULE = "WAIVER-SYNTAX"
+
+#: any comment that *tries* to be a waiver (so typos don't silently
+#: waive nothing)
+_ATTEMPT_RE = re.compile(r"#\s*repro\s*:\s*allow\b")
+_WAIVER_RE = re.compile(
+    r"#\s*repro\s*:\s*allow\(\s*(?P<rule>[A-Za-z0-9_-]+)\s*\)"
+    r"\s*(?:--\s*(?P<why>\S.*))?")
+
+
+@dataclasses.dataclass
+class Waiver:
+    rule: str
+    target_line: int     # the single line this waiver suppresses on
+    justification: str
+
+
+def parse_waivers(source: str,
+                  path: str) -> Tuple[List[Waiver], List[Finding]]:
+    """Scan comments (via tokenize, so '#' inside strings never
+    matches) -> (waivers, malformed-waiver findings)."""
+    waivers: List[Waiver] = []
+    findings: List[Finding] = []
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return waivers, findings     # parse errors reported elsewhere
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        if not _ATTEMPT_RE.search(tok.string):
+            continue
+        line, col = tok.start
+        m = _WAIVER_RE.search(tok.string)
+        if m is None:
+            findings.append(Finding(
+                path=path, line=line, col=col, rule=WAIVER_RULE,
+                message="malformed waiver; expected "
+                        "'# repro: allow(RULE-ID) -- justification'"))
+            continue
+        if not m.group("why"):
+            findings.append(Finding(
+                path=path, line=line, col=col, rule=WAIVER_RULE,
+                message=f"waiver for {m.group('rule')} lacks a "
+                        f"justification after '--'"))
+            continue
+        standalone = tok.line[:col].strip() == ""
+        waivers.append(Waiver(rule=m.group("rule"),
+                              target_line=line + 1 if standalone else line,
+                              justification=m.group("why").strip()))
+    return waivers, findings
+
+
+def apply_waivers(findings: List[Finding],
+                  waivers_by_path: Dict[str, List[Waiver]]
+                  ) -> Tuple[List[Finding], int]:
+    """Drop findings covered by a waiver -> (kept, waived_count).
+    ``WAIVER-SYNTAX`` findings are never waivable."""
+    kept: List[Finding] = []
+    waived = 0
+    for f in findings:
+        ws = waivers_by_path.get(f.path, ())
+        if f.rule != WAIVER_RULE and any(
+                w.rule == f.rule and w.target_line == f.line for w in ws):
+            waived += 1
+            continue
+        kept.append(f)
+    return kept, waived

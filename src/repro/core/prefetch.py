@@ -100,6 +100,10 @@ class Prefetcher:
         self.edge_max = edge_max
         self.q: "queue.Queue[Optional[StagedBatch]]" = queue.Queue(maxsize=Q)
         self.metrics = metrics
+        self._err: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True)
 
     def start(self) -> "Prefetcher":
@@ -107,21 +111,63 @@ class Prefetcher:
         return self
 
     def _run(self) -> None:
-        for i, b in enumerate(self.es.batches):
-            t0 = time.perf_counter()
-            cb = collate(b, self.labels, self.batch_size, self.m_max,
-                         self.edge_max)
-            feats = assemble_features(cb, self.store, self.dbc.steady,
-                                      self.metrics, critical_path=False)
-            dt = time.perf_counter() - t0
-            self.q.put(StagedBatch(i, cb, feats, dt))
-        self.q.put(None)                      # epoch sentinel
+        try:
+            for i, b in enumerate(self.es.batches):
+                if self._stop.is_set():
+                    return
+                t0 = time.perf_counter()
+                cb = collate(b, self.labels, self.batch_size, self.m_max,
+                             self.edge_max)
+                feats = assemble_features(cb, self.store, self.dbc.steady,
+                                          self.metrics, critical_path=False)
+                dt = time.perf_counter() - t0
+                self._put(StagedBatch(i, cb, feats, dt))
+        except BaseException as exc:          # re-raised in get()/join()
+            with self._err_lock:
+                self._err = exc
+        finally:
+            self._put(None)                   # epoch sentinel / unblock
+
+    def _put(self, item: Optional[StagedBatch]) -> None:
+        # bounded put that yields to close(): never deadlocks on a full
+        # queue after the consumer has gone away
+        while not self._stop.is_set():
+            try:
+                self.q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
 
     def get(self) -> Optional[StagedBatch]:
-        return self.q.get()
+        item = self.q.get()
+        if item is None:
+            self._raise_pending()
+        return item
 
-    def join(self) -> None:
-        self._thread.join()
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout=timeout)
+        self._raise_pending()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Idempotent exception-path teardown: drains the bounded queue so
+        a blocked producer exits, then joins it with a deadline."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        if self._thread.ident is not None:
+            self._thread.join(timeout=timeout)
+
+    def _raise_pending(self) -> None:
+        with self._err_lock:
+            err, self._err = self._err, None
+        if err is not None:
+            raise RuntimeError("prefetch thread failed") from err
 
 
 class SecondaryCacheBuilder:
@@ -133,6 +179,9 @@ class SecondaryCacheBuilder:
         self.store = store
         self.dbc = dbc
         self.metrics = metrics
+        self._err: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True)
 
     def start(self) -> "SecondaryCacheBuilder":
@@ -140,9 +189,28 @@ class SecondaryCacheBuilder:
         return self
 
     def _run(self) -> None:
-        ids = self.next_es.cache_ids
-        feats = self.store.vector_pull(ids, self.metrics)
-        self.dbc.stage_secondary(FeatureCache(ids, feats))
+        try:
+            ids = self.next_es.cache_ids
+            feats = self.store.vector_pull(ids, self.metrics)
+            self.dbc.stage_secondary(FeatureCache(ids, feats))
+        except BaseException as exc:          # re-raised in join()
+            with self._err_lock:
+                self._err = exc
 
-    def join(self) -> None:
-        self._thread.join()
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout=timeout)
+        self._raise_pending()
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Idempotent exception-path join (does not re-raise)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._thread.ident is not None:
+            self._thread.join(timeout=timeout)
+
+    def _raise_pending(self) -> None:
+        with self._err_lock:
+            err, self._err = self._err, None
+        if err is not None:
+            raise RuntimeError("secondary cache build failed") from err

@@ -71,20 +71,29 @@ class RapidGNNRunner:
             pf = Prefetcher(es, self.store, self.dbc, labels,
                             self.batch_size, self.m_max, self.edge_max,
                             self.Q, m).start()
-            while True:
-                t0 = time.perf_counter()
-                staged = pf.get()
-                stall = time.perf_counter() - t0
-                if staged is None:
-                    break
-                m.fetch_stall_s += stall
-                m.prefetch_hits += 1
-                t1 = time.perf_counter()
-                self.train_fn(staged.features, staged.collated)
-                m.compute_time_s += time.perf_counter() - t1
-            pf.join()
-            if builder is not None:
-                builder.join()
+            try:
+                while True:
+                    t0 = time.perf_counter()
+                    staged = pf.get()
+                    stall = time.perf_counter() - t0
+                    if staged is None:
+                        break
+                    m.fetch_stall_s += stall
+                    m.prefetch_hits += 1
+                    t1 = time.perf_counter()
+                    self.train_fn(staged.features, staged.collated)
+                    m.compute_time_s += time.perf_counter() - t1
+                pf.join()
+                if builder is not None:
+                    builder.join()
+            except BaseException:
+                # unblock + bound both producers before propagating, so a
+                # train_fn failure can't leak a thread wedged on a full
+                # queue or an un-reaped C_sec pull
+                pf.close()
+                if builder is not None:
+                    builder.close()
+                raise
             self.dbc.swap()             # C_sec -> C_s (Alg.1 l.18)
             m.wall_time_s = time.perf_counter() - t_epoch
             self.metrics.epochs.append(m)

@@ -126,6 +126,8 @@ class SpillWriter:
     def __init__(self):
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
+        self._closed = False
         self._t = threading.Thread(target=self._run, daemon=True)
         self._t.start()
 
@@ -138,11 +140,14 @@ class SpillWriter:
                 path, es = item
                 save_epoch_npz(path, es)
             except BaseException as exc:      # surfaced at next flush()
-                self._err = exc
+                with self._err_lock:
+                    self._err = exc
             finally:
                 self._q.task_done()
 
     def submit(self, path: str, es: EpochSchedule) -> None:
+        if self._closed:
+            raise RuntimeError("SpillWriter.submit() after close()")
         self._raise_pending()
         self._q.put((path, es))
 
@@ -150,14 +155,23 @@ class SpillWriter:
         self._q.join()
         self._raise_pending()
 
-    def close(self) -> None:
-        self.flush()
-        self._q.put(None)
-        self._t.join()
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Idempotent teardown, safe on exception paths: the sentinel is
+        posted and the worker joined (bounded) even if flush() raises a
+        pending writer error."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.flush()
+        finally:
+            self._q.put(None)
+            self._t.join(timeout=timeout)
 
     def _raise_pending(self) -> None:
-        if self._err is not None:
+        with self._err_lock:
             err, self._err = self._err, None
+        if err is not None:
             raise RuntimeError("background spill write failed") from err
 
 

@@ -30,6 +30,7 @@ import dataclasses
 import numpy as np
 
 from repro.graph.graph import Graph
+from repro.graph.sampler import rng_from
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +76,7 @@ def _zipf_weights(n: int, a: float, rng: np.random.Generator) -> np.ndarray:
 
 
 def make_powerlaw_graph(spec: DatasetSpec, seed: int = 0) -> Graph:
-    rng = np.random.default_rng(seed)
+    rng = rng_from(seed)        # RNG-CONTRACT: keyed Philox stream
     n = spec.num_nodes
 
     clusters = rng.integers(0, spec.num_clusters, size=n).astype(np.int32)

@@ -6,7 +6,7 @@ is a multilevel-flavoured stand-in: BFS-grown regions seeded at high-degree
 nodes with a balance constraint, followed by a boundary-refinement pass
 (Kernighan-Lin flavoured, single sweep). Its cut quality is below real
 METIS, which *increases* the remote-node fraction every method sees --
-conservative for RapidGNN's relative claims (see DESIGN.md §8).
+conservative for RapidGNN's relative claims (see DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -16,6 +16,7 @@ from typing import List
 import numpy as np
 
 from repro.graph.graph import Graph
+from repro.graph.sampler import rng_from
 
 
 @dataclasses.dataclass
@@ -47,7 +48,7 @@ def _finalize(graph: Graph, owner: np.ndarray, num_parts: int) -> PartitionedGra
 
 
 def random_partition(graph: Graph, num_parts: int, seed: int = 0) -> PartitionedGraph:
-    rng = np.random.default_rng(seed)
+    rng = rng_from(seed)        # RNG-CONTRACT: keyed Philox stream
     n = graph.num_nodes
     # balanced random: shuffle then chunk
     perm = rng.permutation(n)
@@ -68,7 +69,7 @@ def greedy_partition(graph: Graph, num_parts: int, seed: int = 0,
     # undirected adjacency for growth
     deg = graph.in_degree()
     order = np.argsort(-deg)            # seeds at high-degree nodes
-    rng = np.random.default_rng(seed)
+    rng = rng_from(seed)        # RNG-CONTRACT: keyed Philox stream
 
     from collections import deque
     frontiers = [deque() for _ in range(num_parts)]

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.data.pipeline import zipf_tokens
+from repro.graph.sampler import rng_from
 from repro.models.transformer import (init_params, init_decode_state,
                                       serve_step)
 
@@ -38,7 +39,7 @@ def main() -> None:
     src_len = 8 if cfg.kind == "encdec" else 0
     states = init_decode_state(cfg, B, max_len=max_len, src_len=src_len)
 
-    rng = np.random.default_rng(args.seed)
+    rng = rng_from(args.seed)   # RNG-CONTRACT: keyed Philox stream
     prompts = zipf_tokens(rng, cfg.vocab_size, (B, args.prompt_len))
 
     @jax.jit

@@ -37,6 +37,7 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
         arrays[key] = arr
         manifest["leaves"][key] = {"shape": list(arr.shape),
                                    "dtype": str(arr.dtype)}
+    # repro: allow(SPILL-SAFETY) -- checkpoint shards are flat ndarrays keyed by leaf path; allow_pickle stays off
     np.savez(os.path.join(path, "arrays.npz"),
              **{k.replace(_SEP, "::"): v for k, v in arrays.items()})
     with open(os.path.join(path, "manifest.json"), "w") as f:
@@ -45,6 +46,7 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
 
 def load_checkpoint(path: str, like: PyTree,
                     shardings: Optional[PyTree] = None) -> PyTree:
+    # repro: allow(SPILL-SAFETY) -- reads back the flat npz checkpoint shards; allow_pickle stays off
     with np.load(os.path.join(path, "arrays.npz")) as z:
         data = {k.replace("::", _SEP): z[k] for k in z.files}
     flat_like, treedef = _flatten(like)

@@ -1,0 +1,10 @@
+"""Bad kernel family: no ref.py, no foo.py, no CPU backend path."""
+import jax.experimental.pallas as pl
+
+
+def foo_op(x):
+    return pl.pallas_call(_body, out_shape=x)(x)
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2

@@ -1,0 +1,10 @@
+"""Bad fixture: a Pallas kernel living outside kernels/."""
+import jax.experimental.pallas as pl
+
+
+def rogue(x):
+    return pl.pallas_call(_body, out_shape=x)(x)      # L6: stray pallas
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

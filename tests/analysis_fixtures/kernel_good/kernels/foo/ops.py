@@ -1,0 +1,6 @@
+"""Good kernel family: public wrapper with interpret-mode backend."""
+from repro.kernels.foo import foo as _impl_foo  # fixture: parse-only
+
+
+def foo(x, interpret=False):
+    return _impl_foo(x, interpret=interpret)

@@ -1,0 +1,5 @@
+"""Good kernel family: the pure reference oracle."""
+
+
+def foo_ref(x):
+    return x * 2

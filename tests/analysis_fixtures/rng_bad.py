@@ -1,0 +1,24 @@
+"""Bad fixture: RNG-CONTRACT violations (pinned by test_analysis.py)."""
+import random
+import time
+
+import numpy as np
+
+
+def unkeyed(n):
+    rng = np.random.default_rng(0)                    # L9: unkeyed stream
+    return rng
+
+
+def global_stream(n):
+    np.random.seed(0)                                 # L14: global seed
+    return np.random.rand(n)                          # L15: global draw
+
+
+def stdlib(n):
+    random.seed(7)                                    # L19: stdlib seed
+    return [random.random() for _ in range(n)]        # L20: stdlib draw
+
+
+def wall_clock():
+    return np.random.default_rng(time.time_ns())      # L24: time-seeded (x2)

@@ -1,0 +1,12 @@
+"""Good fixture: randomness arrives via the sanctioned keyed streams."""
+from repro.graph.sampler import rng_from
+
+
+def keyed_draw(s0, worker, epoch, n):
+    rng = rng_from(s0, worker, epoch)
+    return rng.integers(0, 100, size=n)
+
+
+def passed_generator(rng, n):
+    # receiving a Generator is always fine; only minting one is gated
+    return rng.normal(size=n)

@@ -1,0 +1,14 @@
+"""Bad fixture: SPILL-SAFETY violations (pinned line numbers)."""
+import pickle
+
+import numpy as np
+
+
+def save(path, arr, obj):
+    np.save(path, arr)                           # L8: np IO outside spill
+    with open(path + ".pkl", "wb") as f:
+        pickle.dump(obj, f)                      # L10: pickled objects
+
+
+def load(path):
+    return np.load(path, allow_pickle=True)      # L14: np IO + pickle (x2)

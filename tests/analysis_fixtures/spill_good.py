@@ -1,0 +1,13 @@
+"""Good fixture: flat in-memory arrays with a JSON sidecar."""
+import json
+
+import numpy as np
+
+
+def pack(arrs):
+    return {k: np.asarray(v) for k, v in arrs.items()}
+
+
+def manifest(path, meta):
+    with open(path, "w") as f:
+        json.dump(meta, f)

@@ -1,0 +1,24 @@
+"""Bad fixture: THREAD-DISCIPLINE violations (pinned line numbers)."""
+import threading
+
+
+class Leaky:
+    def __init__(self):
+        self._result = None
+        self._t = threading.Thread(target=self._run, daemon=True)  # L8: x3
+        self._t.start()
+
+    def _run(self):
+        self._result = 42             # written by thread, read below
+
+    def result(self):
+        return self._result
+
+
+def fire_and_forget():
+    threading.Thread(target=print, daemon=True).start()            # L19
+
+
+def local_daemon():
+    t = threading.Thread(target=print, daemon=True)                # L23
+    t.start()

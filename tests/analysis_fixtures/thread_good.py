@@ -1,0 +1,34 @@
+"""Good fixture: owned, joined, exception-propagating worker."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._err = None
+        self._err_lock = threading.Lock()
+        self._result = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        try:
+            self._result = 42
+        except BaseException as exc:
+            with self._err_lock:
+                self._err = exc
+
+    def join(self, timeout=None):
+        self._t.join(timeout)
+        with self._err_lock:
+            err, self._err = self._err, None
+        if err is not None:
+            raise RuntimeError("worker failed") from err
+
+    def result(self):
+        return self._result
+
+
+def run_owned():
+    t = threading.Thread(target=print, daemon=True)
+    t.start()
+    t.join()

@@ -1,0 +1,22 @@
+"""Bad fixture: TRACE-PURITY violations inside jit-reachable code."""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    t0 = time.perf_counter()          # L9: time.* at trace time
+    v = x.sum().item()                # L10: host sync
+    n = int(x[0])                     # L11: concretizes a tracer
+    print("step", n)                  # L12: host IO at trace time
+    return v + t0
+
+
+def helper(x):
+    return float(x.mean())            # L17: reached transitively
+
+
+@jax.jit
+def outer(x):
+    return helper(x)

@@ -1,0 +1,27 @@
+"""Good fixture: shape-static casts; host work stays outside trace."""
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("block",))
+def tiled(x, block):
+    nb = int(x.shape[0] // block)     # shape + static param: fine
+    bits = int(block - 1).bit_length()
+    return x[: nb * block], bits
+
+
+def host_loop(xs):
+    t0 = time.perf_counter()          # not trace-reachable: fine
+    out = [float(x) for x in xs]
+    print(len(out))
+    return out, time.perf_counter() - t0
+
+
+@jax.jit
+def body(x):
+    m = x.shape[0]
+    k = int(m * 2)                    # static dataflow through m
+    return jnp.zeros((k,)) + x.sum()

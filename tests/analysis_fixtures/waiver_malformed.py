@@ -1,0 +1,11 @@
+"""Waivers that are themselves findings (and waive nothing)."""
+import numpy as np
+
+
+def a():
+    return np.random.default_rng(0)  # repro: allow(RNG-CONTRACT)
+
+
+def b():
+    # repro: allow(RNG-CONTRACT) this text lacks the dash separator
+    return np.random.default_rng(0)

@@ -1,0 +1,10 @@
+"""Two identical violations; exactly one carries a valid waiver."""
+import numpy as np
+
+
+def a():
+    return np.random.default_rng(0)  # repro: allow(RNG-CONTRACT) -- fixture: deliberate suppression
+
+
+def b():
+    return np.random.default_rng(0)                   # L10: NOT waived

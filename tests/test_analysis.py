@@ -1,0 +1,210 @@
+"""Tier-1 tests for ``repro.analysis``: pinned fixture findings, waiver
+semantics, contract-injection checks against copies of the real tree,
+CLI exit codes, and the CI wall-time budget.
+
+The fixture corpus lives in ``tests/analysis_fixtures/`` -- one bad and
+one good file per rule, with expected (rule, line) pairs pinned here so
+any drift in a rule's reach shows up as an exact-diff failure.
+"""
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths
+from repro.analysis.imports import build_import_report
+from repro.analysis.rules import RULE_IDS
+
+REPO = Path(__file__).resolve().parent.parent
+FIX = REPO / "tests" / "analysis_fixtures"
+SRC = REPO / "src"
+
+
+def scan(*paths, rules=None):
+    return analyze_paths([str(p) for p in paths], rules=rules)
+
+
+def keyed(res):
+    return sorted((f.rule, f.line) for f in res.findings)
+
+
+# -- pinned bad fixtures -------------------------------------------------
+
+BAD_CASES = [
+    ("rng_bad.py",
+     [("RNG-CONTRACT", 9), ("RNG-CONTRACT", 14), ("RNG-CONTRACT", 15),
+      ("RNG-CONTRACT", 19), ("RNG-CONTRACT", 20),
+      # L24 carries two findings: outside-sanctioned AND time-seeded
+      ("RNG-CONTRACT", 24), ("RNG-CONTRACT", 24)]),
+    ("trace_bad.py",
+     [("TRACE-PURITY", 9), ("TRACE-PURITY", 10), ("TRACE-PURITY", 11),
+      ("TRACE-PURITY", 12), ("TRACE-PURITY", 17)]),
+    ("thread_bad.py",
+     # L8 carries three findings: never joined, no broad capture,
+     # unlocked shared attr
+     [("THREAD-DISCIPLINE", 8), ("THREAD-DISCIPLINE", 8),
+      ("THREAD-DISCIPLINE", 8), ("THREAD-DISCIPLINE", 19),
+      ("THREAD-DISCIPLINE", 23)]),
+    ("spill_bad.py",
+     # L14 carries two findings: np IO outside spill AND allow_pickle
+     [("SPILL-SAFETY", 8), ("SPILL-SAFETY", 10),
+      ("SPILL-SAFETY", 14), ("SPILL-SAFETY", 14)]),
+]
+
+
+@pytest.mark.parametrize("fname,expected",
+                         BAD_CASES, ids=[c[0] for c in BAD_CASES])
+def test_bad_fixture_pinned_findings(fname, expected):
+    res = scan(FIX / fname)
+    assert keyed(res) == sorted(expected)
+    assert res.waived == 0
+
+
+def test_kernel_bad_fixture():
+    res = scan(FIX / "kernel_bad")
+    assert keyed(res) == [("KERNEL-LAYOUT", 1), ("KERNEL-LAYOUT", 1),
+                          ("KERNEL-LAYOUT", 1), ("KERNEL-LAYOUT", 6)]
+    msgs = sorted(f.message for f in res.findings)
+    assert any("missing ref.py" in m for m in msgs)
+    assert any("missing foo.py" in m for m in msgs)
+    assert any("no interpret-mode backend" in m for m in msgs)
+    assert any("outside kernels/" in m for m in msgs)
+
+
+GOOD_FIXTURES = ["rng_good.py", "trace_good.py", "thread_good.py",
+                 "spill_good.py", "kernel_good"]
+
+
+@pytest.mark.parametrize("fname", GOOD_FIXTURES)
+def test_good_fixture_clean(fname):
+    res = scan(FIX / fname)
+    assert res.findings == []
+    assert res.waived == 0
+
+
+# -- waiver semantics ----------------------------------------------------
+
+def test_waiver_suppresses_exactly_one():
+    res = scan(FIX / "waiver_one_of_two.py")
+    assert keyed(res) == [("RNG-CONTRACT", 10)]
+    assert res.waived == 1
+
+
+def test_malformed_waiver_is_a_finding_and_waives_nothing():
+    res = scan(FIX / "waiver_malformed.py")
+    assert keyed(res) == [("RNG-CONTRACT", 6), ("RNG-CONTRACT", 11),
+                          ("WAIVER-SYNTAX", 6), ("WAIVER-SYNTAX", 10)]
+    assert res.waived == 0
+
+
+def test_rule_subset_filter():
+    res = scan(FIX / "rng_bad.py", rules=())
+    assert res.findings == []  # no rules -> only waiver syntax checks
+
+
+# -- contract injection against copies of the real tree ------------------
+
+def _copy_into(tmp_path: Path, rel: str) -> Path:
+    """Copy src/<rel> under tmp preserving the repro/... suffix so the
+    sanctioned-location matching still applies."""
+    dst = tmp_path / rel
+    dst.parent.mkdir(parents=True, exist_ok=True)
+    shutil.copy(SRC / rel, dst)
+    return dst
+
+
+def test_injected_global_seed_is_caught(tmp_path):
+    dst = _copy_into(tmp_path, "repro/dist/runner.py")
+    assert scan(tmp_path).findings == []          # clean before injection
+    with open(dst, "a") as f:
+        f.write("\n\nnp.random.seed(1234)\n")
+    res = scan(tmp_path)
+    assert [f.rule for f in res.findings] == ["RNG-CONTRACT"]
+    # the finding is on the appended last line
+    assert res.findings[0].line == len(dst.read_text().splitlines())
+
+
+def test_injected_daemon_thread_is_caught(tmp_path):
+    dst = _copy_into(tmp_path, "repro/graph/sampler.py")
+    assert scan(tmp_path).findings == []          # sanctioned np.random
+    with open(dst, "a") as f:
+        f.write("\n\nimport threading\n"
+                "threading.Thread(target=print, daemon=True).start()\n")
+    res = scan(tmp_path)
+    assert [f.rule for f in res.findings] == ["THREAD-DISCIPLINE"]
+    assert "bare daemon thread" in res.findings[0].message
+
+
+# -- the real tree -------------------------------------------------------
+
+def test_src_tree_is_clean_and_fast():
+    res = scan(SRC)
+    assert res.findings == []
+    assert res.files_scanned > 50
+    assert res.elapsed_s < 10.0, \
+        f"invariant scan took {res.elapsed_s:.2f}s (budget 10s)"
+
+
+def test_import_report_reaches_live_surfaces():
+    rep = build_import_report(str(SRC))
+    assert "repro.core.schedule" in rep.reachable
+    assert "repro.graph.sampler" in rep.reachable
+    assert "repro.dist.runner" in rep.reachable
+    # inventory only: every module is either reachable or listed dead
+    assert set(rep.dead) | rep.reachable == set(rep.modules)
+    assert rep.format().splitlines()[0].startswith("import graph:")
+
+
+# -- CLI exit codes ------------------------------------------------------
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=REPO, capture_output=True, text=True, env=env)
+
+
+@pytest.mark.parametrize("bad", ["rng_bad.py", "trace_bad.py",
+                                 "thread_bad.py", "spill_bad.py",
+                                 "kernel_bad", "waiver_malformed.py"])
+def test_cli_strict_exit_1_on_bad_fixture(bad):
+    p = _cli(str(FIX / bad), "--strict")
+    assert p.returncode == 1, p.stdout + p.stderr
+    first = p.stdout.splitlines()[0]
+    # path:line:col RULE-ID message
+    loc, rest = first.split(" ", 1)
+    assert loc.count(":") == 2 and rest.split()[0] in set(RULE_IDS) | {
+        "WAIVER-SYNTAX"}
+
+
+def test_cli_strict_exit_0_on_src():
+    p = _cli("src", "--strict")
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "0 finding(s)" in p.stdout
+
+
+def test_cli_report_mode_never_fails():
+    p = _cli(str(FIX / "rng_bad.py"))
+    assert p.returncode == 0
+    assert "7 finding(s)" in p.stdout
+
+
+def test_cli_wall_time_budget_exit_2():
+    p = _cli(str(FIX / "rng_good.py"), "--max-seconds", "0")
+    assert p.returncode == 2
+    assert "exceeds" in p.stderr
+
+
+def test_cli_report_dead():
+    p = _cli("src", "--report-dead")
+    assert p.returncode == 0
+    assert "import graph:" in p.stdout
+
+
+def test_cli_unknown_rule_rejected():
+    p = _cli("src", "--rules", "NO-SUCH-RULE")
+    assert p.returncode == 2  # argparse error
