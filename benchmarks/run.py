@@ -157,6 +157,30 @@ def main() -> None:
     # batched-vs-loop schedule parity mismatch, campaign-style
     _section("schedule_build", schedule_build.run,
              lambda rows: rows[-1] if rows else "-")
+
+    def _fault_recovery():
+        """Seeded chaos sweep (DESIGN.md §10): every injected fault
+        plan must recover BIT-equal to the clean oracle or surface a
+        typed error, and the checkpoint-atomicity drill must hold.
+        Raises -> section FAILED + a ``recovery FAILED`` line in the
+        log (CI greps for it)."""
+        from repro.fault.chaos import run_chaos
+
+        out = run_chaos(seed=0, fast=not args.full,
+                        n_random=8 if args.full else 2)
+        rows = ["plan,fires,outcome"]
+        for r in out["runs"]:
+            rows.append(f"{r['plan']},{r['fires']},{r['outcome']}")
+        rows.append("checkpoint_drill,-,"
+                    + ("ok" if out["checkpoint_drill"] else "failed"))
+        if not out["ok"]:
+            raise RuntimeError(
+                "recovery FAILED: "
+                + (",".join(out["failed_plans"]) or "checkpoint drill"))
+        return rows
+
+    _section("fault_recovery", _fault_recovery,
+             lambda rows: rows[-1] if rows else "-")
     if not args.skip_roofline:
         from benchmarks import roofline
 

@@ -19,11 +19,18 @@ from typing import Optional
 import numpy as np
 
 from repro.core.metrics import EpochMetrics, NetworkModel
+from repro.fault.inject import fault_point, retry_call
 from repro.graph.partition import PartitionedGraph
 
 
 class ShardedFeatureStore:
     """Paper's Distributed KV store: features owned per partition."""
+
+    #: bounded retry budget for transient pull failures (fault plane,
+    #: DESIGN.md §10): a SyncPull RPC that fails transiently is retried
+    #: with exponential backoff; a persistent failure propagates typed.
+    pull_retries = 2
+    retry_base_s = 1e-3
 
     def __init__(self, pg: PartitionedGraph, worker: int,
                  net: Optional[NetworkModel] = None):
@@ -50,6 +57,16 @@ class ShardedFeatureStore:
     # -- residual miss fetch (paper Alg. 1 line 14) -------------------------
     def sync_pull(self, ids: np.ndarray, m: EpochMetrics,
                   critical_path: bool = False) -> np.ndarray:
+        # transient-failure probe BEFORE any accounting: a retried pull
+        # must not inflate rpc_count/remote_bytes (the bytes_identity
+        # differential check counts successful transfers only)
+        def _on_retry(_a: int) -> None:
+            m.pull_retries += 1
+        retry_call(lambda a: fault_point("pull", attempt=a,
+                                         epoch=m.epoch,
+                                         worker=self.worker),
+                   self.pull_retries, self.retry_base_s,
+                   on_retry=_on_retry)
         remote = self._remote_mask(ids)
         n_remote = int(remote.sum())
         nbytes = n_remote * self.d * self.itemsize

@@ -71,6 +71,10 @@ class EpochMetrics:
     fetch_stall_s: float = 0.0       # critical-path fetch time
     modeled_net_time_s: float = 0.0
     sync_net_time_s: float = 0.0     # SyncPull-only (per-step network time)
+    # -- fault plane (DESIGN.md §10): recovery accounting ------------------
+    pull_retries: int = 0            # transient sync_pull failures retried
+    prefetch_retries: int = 0        # prefetch batches rebuilt after fault
+    csec_degraded: int = 0           # C_sec build lost -> stale C_s kept
 
     @property
     def hit_rate(self) -> float:

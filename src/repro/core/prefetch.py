@@ -28,6 +28,23 @@ from repro.core.fetch import ShardedFeatureStore
 from repro.core.metrics import EpochMetrics
 from repro.core.schedule import (CollatedBatch, EpochSchedule, collate,
                                  epoch_edge_maxima)
+from repro.fault.inject import fault_point, retry_call
+
+
+class PrefetchWorkerError(RuntimeError):
+    """The prefetch thread died (non-retryable failure or retry budget
+    exhausted); the original exception rides along as ``__cause__``."""
+
+
+class SecondaryCacheError(RuntimeError):
+    """The C_sec builder thread died; the consumer may degrade (keep the
+    stale steady cache -- lossless, counted) instead of failing the run."""
+
+
+class PrefetchStall(TimeoutError):
+    """``Prefetcher.get(timeout=)`` expired: the producer is late or
+    hung. The consumer can fall back to a critical-path batch rebuild
+    (``RapidGNNRunner`` does) -- determinism is unaffected either way."""
 
 
 class StagedBatch:
@@ -85,7 +102,18 @@ def assemble_features(cb: CollatedBatch, store: ShardedFeatureStore,
 
 
 class Prefetcher:
-    """Producer thread staging the next Q batches (paper Alg. 1 line 10)."""
+    """Producer thread staging the next Q batches (paper Alg. 1 line 10).
+
+    Supervision (DESIGN.md §10): a transiently-failing batch build is
+    retried in place with exponential backoff (``max_retries``, counted
+    in ``metrics.prefetch_retries``); a persistent/fatal failure lands
+    in ``_err`` and surfaces TYPED (``PrefetchWorkerError``) at the
+    sentinel or join. ``join`` is deadline-bounded and names the stuck
+    thread, so a hung producer can never deadlock runner teardown."""
+
+    #: bounded retry budget for transient per-batch build failures
+    max_retries = 2
+    retry_base_s = 1e-3
 
     def __init__(self, es: EpochSchedule, store: ShardedFeatureStore,
                  dbc: DoubleBufferCache, labels: np.ndarray,
@@ -104,24 +132,39 @@ class Prefetcher:
         self._err_lock = threading.Lock()
         self._stop = threading.Event()
         self._closed = False
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"prefetch-w{store.worker}-e{es.epoch}")
 
     def start(self) -> "Prefetcher":
         self._thread.start()
         return self
+
+    def _build(self, i: int, b, attempt: int) -> StagedBatch:
+        # the fault probe sits BEFORE assembly so a retried attempt
+        # never double-counts hit/miss/byte metrics
+        fault_point("prefetch", attempt=attempt, epoch=self.es.epoch,
+                    worker=self.store.worker, index=i)
+        t0 = time.perf_counter()
+        cb = collate(b, self.labels, self.batch_size, self.m_max,
+                     self.edge_max)
+        feats = assemble_features(cb, self.store, self.dbc.steady,
+                                  self.metrics, critical_path=False)
+        return StagedBatch(i, cb, feats, time.perf_counter() - t0)
+
+    def _count_retry(self, _attempt: int) -> None:
+        self.metrics.prefetch_retries += 1
 
     def _run(self) -> None:
         try:
             for i, b in enumerate(self.es.batches):
                 if self._stop.is_set():
                     return
-                t0 = time.perf_counter()
-                cb = collate(b, self.labels, self.batch_size, self.m_max,
-                             self.edge_max)
-                feats = assemble_features(cb, self.store, self.dbc.steady,
-                                          self.metrics, critical_path=False)
-                dt = time.perf_counter() - t0
-                self._put(StagedBatch(i, cb, feats, dt))
+                staged = retry_call(
+                    lambda a, _i=i, _b=b: self._build(_i, _b, a),
+                    self.max_retries, self.retry_base_s,
+                    on_retry=self._count_retry)
+                self._put(staged)
         except BaseException as exc:          # re-raised in get()/join()
             with self._err_lock:
                 self._err = exc
@@ -138,14 +181,23 @@ class Prefetcher:
             except queue.Full:
                 continue
 
-    def get(self) -> Optional[StagedBatch]:
-        item = self.q.get()
+    def get(self, timeout: Optional[float] = None) -> Optional[StagedBatch]:
+        try:
+            item = self.q.get(timeout=timeout)
+        except queue.Empty:
+            raise PrefetchStall(
+                f"prefetch thread {self._thread.name} produced nothing "
+                f"within {timeout}s") from None
         if item is None:
             self._raise_pending()
         return item
 
-    def join(self, timeout: Optional[float] = None) -> None:
+    def join(self, timeout: Optional[float] = 30.0) -> None:
         self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"prefetch thread {self._thread.name} still alive after "
+                f"{timeout}s join deadline")
         self._raise_pending()
 
     def close(self, timeout: float = 5.0) -> None:
@@ -167,11 +219,17 @@ class Prefetcher:
         with self._err_lock:
             err, self._err = self._err, None
         if err is not None:
-            raise RuntimeError("prefetch thread failed") from err
+            raise PrefetchWorkerError("prefetch thread failed") from err
 
 
 class SecondaryCacheBuilder:
-    """Builds C_sec for epoch e+1 concurrently (paper Alg. 1 lines 7-9)."""
+    """Builds C_sec for epoch e+1 concurrently (paper Alg. 1 lines 7-9).
+
+    A failed build surfaces as ``SecondaryCacheError`` at join; the
+    consumer may degrade by keeping the stale steady cache (``swap()``
+    no-ops without a staged secondary -- lossless, since the cache only
+    redirects fetches). A HUNG build is NOT degradable: the bounded
+    join raises a loud ``TimeoutError`` naming the thread."""
 
     def __init__(self, next_es: EpochSchedule, store: ShardedFeatureStore,
                  dbc: DoubleBufferCache, metrics: EpochMetrics):
@@ -182,7 +240,9 @@ class SecondaryCacheBuilder:
         self._err: Optional[BaseException] = None
         self._err_lock = threading.Lock()
         self._closed = False
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"csec-w{store.worker}-e{metrics.epoch}")
 
     def start(self) -> "SecondaryCacheBuilder":
         self._thread.start()
@@ -190,6 +250,8 @@ class SecondaryCacheBuilder:
 
     def _run(self) -> None:
         try:
+            fault_point("csec", epoch=self.metrics.epoch,
+                        worker=self.store.worker)
             ids = self.next_es.cache_ids
             feats = self.store.vector_pull(ids, self.metrics)
             self.dbc.stage_secondary(FeatureCache(ids, feats))
@@ -197,8 +259,12 @@ class SecondaryCacheBuilder:
             with self._err_lock:
                 self._err = exc
 
-    def join(self, timeout: Optional[float] = None) -> None:
+    def join(self, timeout: Optional[float] = 30.0) -> None:
         self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"secondary-cache thread {self._thread.name} still alive "
+                f"after {timeout}s join deadline")
         self._raise_pending()
 
     def close(self, timeout: float = 5.0) -> None:
@@ -213,4 +279,5 @@ class SecondaryCacheBuilder:
         with self._err_lock:
             err, self._err = self._err, None
         if err is not None:
-            raise RuntimeError("secondary cache build failed") from err
+            raise SecondaryCacheError(
+                "secondary cache build failed") from err

@@ -17,8 +17,11 @@ import numpy as np
 from repro.core.cache import DoubleBufferCache, FeatureCache
 from repro.core.fetch import ShardedFeatureStore
 from repro.core.metrics import EpochMetrics, NetworkModel, RunMetrics
-from repro.core.prefetch import (Prefetcher, SecondaryCacheBuilder,
-                                 StagedBatch, assemble_features, local_fill)
+from repro.core.prefetch import (Prefetcher, PrefetchStall,
+                                 PrefetchWorkerError,
+                                 SecondaryCacheBuilder,
+                                 SecondaryCacheError, StagedBatch,
+                                 assemble_features, local_fill)
 from repro.core.schedule import WorkerSchedule, collate
 
 TrainFn = Callable[[np.ndarray, "CollatedBatch"], float]  # noqa: F821
@@ -33,17 +36,47 @@ def global_pad_bounds(ws: WorkerSchedule):
 
 
 class RapidGNNRunner:
+    """Alg. 1 consumer with supervision (DESIGN.md §10):
+
+    * ``stall_timeout_s`` bounds each queue wait; on expiry the trainer
+      rebuilds the batch on the critical path (``default_path`` counts
+      it) from the SAME deterministic schedule, so a late/hung producer
+      costs wall time, never changes the loss curve. ``None`` (default)
+      keeps the historical blocking behavior.
+    * a failed C_sec build degrades: the stale steady cache is kept for
+      the next epoch (``csec_degraded`` counts it) -- lossless, since
+      the cache only redirects fetches, never alters feature values.
+    * producer joins are deadline-bounded (``join_timeout_s``); a hung
+      thread raises a loud ``TimeoutError`` naming it.
+    """
+
     def __init__(self, ws: WorkerSchedule, store: ShardedFeatureStore,
                  batch_size: int, Q: int = 4,
-                 train_fn: Optional[TrainFn] = None):
+                 train_fn: Optional[TrainFn] = None,
+                 stall_timeout_s: Optional[float] = None,
+                 join_timeout_s: float = 30.0):
         self.ws = ws
         self.store = store
         self.batch_size = batch_size
         self.Q = Q
         self.train_fn = train_fn or (lambda feats, cb: 0.0)
+        self.stall_timeout_s = stall_timeout_s
+        self.join_timeout_s = join_timeout_s
         self.dbc = DoubleBufferCache(store.d)
         self.m_max, self.edge_max = global_pad_bounds(ws)
         self.metrics = RunMetrics()
+
+    def _build_batch(self, es, i: int, labels, m: EpochMetrics
+                     ) -> StagedBatch:
+        """Critical-path fallback: rebuild batch ``i`` exactly as the
+        prefetcher would have (same schedule, same cache, same pull set)
+        when the trainer outruns or outlives the producer."""
+        b = es.batches[i]
+        cb = collate(b, labels, self.batch_size, self.m_max,
+                     self.edge_max)
+        feats = assemble_features(cb, self.store, self.dbc.steady, m,
+                                  critical_path=True)
+        return StagedBatch(i, cb, feats, 0.0)
 
     def run(self) -> RunMetrics:
         labels = self.store.pg.graph.labels
@@ -72,20 +105,45 @@ class RapidGNNRunner:
                             self.batch_size, self.m_max, self.edge_max,
                             self.Q, m).start()
             try:
-                while True:
+                expect, n_batches = 0, es.num_batches
+                while expect < n_batches:
                     t0 = time.perf_counter()
-                    staged = pf.get()
-                    stall = time.perf_counter() - t0
-                    if staged is None:
-                        break
-                    m.fetch_stall_s += stall
-                    m.prefetch_hits += 1
+                    try:
+                        staged = pf.get(timeout=self.stall_timeout_s)
+                    except PrefetchStall:
+                        # producer late/hung: rebuild batch `expect` on
+                        # the critical path -- deterministic, so the
+                        # loss curve is unchanged (DESIGN.md §10)
+                        m.fetch_stall_s += time.perf_counter() - t0
+                        staged = self._build_batch(es, expect, labels, m)
+                        m.default_path += 1
+                    else:
+                        m.fetch_stall_s += time.perf_counter() - t0
+                        if staged is None:
+                            raise PrefetchWorkerError(
+                                f"prefetcher ended early at batch "
+                                f"{expect}/{n_batches}")
+                        if staged.index < expect:
+                            continue    # duplicate of a fallback batch
+                        m.prefetch_hits += 1
                     t1 = time.perf_counter()
                     self.train_fn(staged.features, staged.collated)
                     m.compute_time_s += time.perf_counter() - t1
-                pf.join()
+                    expect += 1
+                # drain to the sentinel: a producer that fell behind the
+                # fallback path may still deliver tail batches (a stall
+                # HERE means it is hung -> bounded get raises typed)
+                while pf.get(timeout=self.join_timeout_s) is not None:
+                    pass
+                pf.join(timeout=self.join_timeout_s)
                 if builder is not None:
-                    builder.join()
+                    try:
+                        builder.join(timeout=self.join_timeout_s)
+                    except SecondaryCacheError:
+                        # degraded mode: keep the stale steady cache for
+                        # e+1 (swap() no-ops without a staged C_sec);
+                        # lossless -- only the miss accounting shifts
+                        m.csec_degraded += 1
             except BaseException:
                 # unblock + bound both producers before propagating, so a
                 # train_fn failure can't leak a thread wedged on a full

@@ -30,12 +30,25 @@ import dataclasses
 import os
 import queue
 import threading
+import zipfile
+import zlib
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fault.inject import fault_point
 from repro.graph.partition import PartitionedGraph
 from repro.graph.sampler import FlatEpoch, KHopSampler, SampledBatch
+
+
+class SpillCorruptError(RuntimeError):
+    """A spilled epoch failed integrity at load: unreadable archive,
+    missing entries, or a per-array crc32 mismatch. ``WorkerSchedule.
+    epoch`` heals it by rebuilding from the deterministic compiler."""
+
+    def __init__(self, msg: str, path: Optional[str] = None):
+        super().__init__(msg)
+        self.path = path
 
 
 class EpochSchedule:
@@ -95,7 +108,12 @@ def spill_path(spill_dir: str, worker: int, e: int) -> str:
 
 def save_epoch_npz(path: str, es: EpochSchedule) -> None:
     """Spill one epoch: every FlatEpoch array plus the hot-set metadata
-    as plain ndarray entries (``allow_pickle`` stays off on reload)."""
+    as plain ndarray entries (``allow_pickle`` stays off on reload).
+
+    Integrity (DESIGN.md §10): each array gets a ``crc32_<name>``
+    companion entry so bit-rot/tearing is detected at load (and healed
+    by rebuild); the write is atomic (tmp + fsync + rename) so a crash
+    mid-spill can never leave a half-written file under the final name."""
     flat = es.flat
     arrs = {
         "meta": np.array([es.epoch, flat.worker, es.m_max,
@@ -111,8 +129,18 @@ def save_epoch_npz(path: str, es: EpochSchedule) -> None:
         arrs[f"edge_dst_{l}"] = flat.edge_dst[l]
         arrs[f"edge_mask_{l}"] = flat.edge_mask[l]
         arrs[f"edge_starts_{l}"] = flat.edge_starts[l]
-    with open(path, "wb") as f:
+    for k in list(arrs):
+        arrs[f"crc32_{k}"] = np.uint32(_array_crc(arrs[k]))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
         np.savez(f, **arrs)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _array_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 class SpillWriter:
@@ -128,7 +156,8 @@ class SpillWriter:
         self._err: Optional[BaseException] = None
         self._err_lock = threading.Lock()
         self._closed = False
-        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t = threading.Thread(target=self._run, daemon=True,
+                                   name="spill-writer")
         self._t.start()
 
     def _run(self):
@@ -139,6 +168,11 @@ class SpillWriter:
                     return
                 path, es = item
                 save_epoch_npz(path, es)
+                # spill-damage probe (corrupt/truncate/drop the file
+                # just written): detection happens at LOAD via the crc
+                # entries, recovery via the builder rebuild
+                fault_point("spill_write", path=path, epoch=es.epoch,
+                            worker=es.flat.worker)
             except BaseException as exc:      # surfaced at next flush()
                 with self._err_lock:
                     self._err = exc
@@ -158,7 +192,8 @@ class SpillWriter:
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Idempotent teardown, safe on exception paths: the sentinel is
         posted and the worker joined (bounded) even if flush() raises a
-        pending writer error."""
+        pending writer error. A writer that outlives the deadline raises
+        a loud ``TimeoutError`` naming the thread (never a silent leak)."""
         if self._closed:
             return
         self._closed = True
@@ -167,6 +202,10 @@ class SpillWriter:
         finally:
             self._q.put(None)
             self._t.join(timeout=timeout)
+            if self._t.is_alive():
+                raise TimeoutError(
+                    f"spill writer thread {self._t.name} still alive "
+                    f"after {timeout}s join deadline")
 
     def _raise_pending(self) -> None:
         with self._err_lock:
@@ -175,21 +214,49 @@ class SpillWriter:
             raise RuntimeError("background spill write failed") from err
 
 
+def _verify_spill(z, path: str) -> None:
+    """Per-array crc check. Files spilled before the crc entries existed
+    stay loadable (no companion entry -> no check)."""
+    for k in z.files:
+        if k.startswith("crc32_"):
+            continue
+        want = f"crc32_{k}"
+        if want not in z.files:
+            continue
+        if _array_crc(z[k]) != int(z[want]):
+            raise SpillCorruptError(
+                f"crc mismatch for array {k!r} in spill {path}",
+                path=path)
+
+
 def load_epoch_npz(path: str) -> EpochSchedule:
-    with np.load(path) as z:
-        e, worker, m_max, L = (int(x) for x in z["meta"])
-        flat = FlatEpoch(
-            epoch=e, worker=worker, seeds=z["seeds"],
-            seed_starts=z["seed_starts"], input_nodes=z["input_nodes"],
-            input_starts=z["input_starts"], num_dst=z["num_dst"],
-            edge_src=[z[f"edge_src_{l}"] for l in range(L)],
-            edge_dst=[z[f"edge_dst_{l}"] for l in range(L)],
-            edge_mask=[z[f"edge_mask_{l}"] for l in range(L)],
-            edge_starts=[z[f"edge_starts_{l}"] for l in range(L)])
-        return EpochSchedule(epoch=e, flat=flat,
-                             remote_ids=z["remote_ids"],
-                             remote_freq=z["remote_freq"],
-                             cache_ids=z["cache_ids"], m_max=m_max)
+    """Load one spilled epoch, raising ``SpillCorruptError`` on ANY
+    integrity failure -- missing/truncated/unreadable archive, missing
+    entries, or crc mismatch -- instead of leaking raw numpy/zipfile
+    errors (the caller's heal path keys on the typed error)."""
+    try:
+        with np.load(path) as z:
+            _verify_spill(z, path)
+            e, worker, m_max, L = (int(x) for x in z["meta"])
+            flat = FlatEpoch(
+                epoch=e, worker=worker, seeds=z["seeds"],
+                seed_starts=z["seed_starts"],
+                input_nodes=z["input_nodes"],
+                input_starts=z["input_starts"], num_dst=z["num_dst"],
+                edge_src=[z[f"edge_src_{l}"] for l in range(L)],
+                edge_dst=[z[f"edge_dst_{l}"] for l in range(L)],
+                edge_mask=[z[f"edge_mask_{l}"] for l in range(L)],
+                edge_starts=[z[f"edge_starts_{l}"] for l in range(L)])
+            return EpochSchedule(epoch=e, flat=flat,
+                                 remote_ids=z["remote_ids"],
+                                 remote_freq=z["remote_freq"],
+                                 cache_ids=z["cache_ids"], m_max=m_max)
+    except SpillCorruptError:
+        raise
+    except (OSError, ValueError, KeyError, EOFError,
+            zipfile.BadZipFile) as exc:
+        raise SpillCorruptError(f"unreadable spill {path}: {exc!r}",
+                                path=path) from exc
 
 
 @dataclasses.dataclass
@@ -202,20 +269,34 @@ class WorkerSchedule:
     #: per-epoch (m_max, edge_maxima) pad metadata, captured at build time
     #: so pad-bound queries never re-load spilled epochs from disk.
     epoch_meta: Optional[List[Tuple[int, List[int]]]] = None
-    #: device-resident mode (``build_schedule(lazy=True)``): epoch
-    #: payloads are not held in memory OR spilled to disk -- ``epoch(e)``
-    #: re-runs the deterministic compiler on demand (bit-identical by
-    #: Prop 3.1), so the runner's staging thread can rebuild epoch e+1
-    #: while epoch e trains.
+    #: on-demand epoch recompiler (bit-identical by Prop 3.1). In lazy /
+    #: device-resident mode it IS the payload source (``epoch(e)``
+    #: re-runs it every call); for spilled schedules it is the HEAL path:
+    #: a spill that fails integrity at load is rebuilt and re-spilled.
     builder: Optional[Callable[[int], EpochSchedule]] = None
+    #: spilled epochs healed by rebuild (fault plane, DESIGN.md §10)
+    spill_rebuilds: int = 0
 
     def epoch(self, e: int) -> EpochSchedule:
-        if self.epochs[e] is None:
-            if self.builder is not None:                # device-resident
-                return self.builder(e)
-            return load_epoch_npz(spill_path(self.spill_dir,   # spilled
-                                             self.worker, e))
-        return self.epochs[e]
+        if self.epochs[e] is not None:
+            return self.epochs[e]
+        if self.spill_dir is not None:                  # spilled
+            path = spill_path(self.spill_dir, self.worker, e)
+            try:
+                return load_epoch_npz(path)
+            except SpillCorruptError:
+                if self.builder is None:
+                    raise
+                # heal: the deterministic compiler IS the backup copy --
+                # rebuild bit-identically and re-spill for the next read
+                self.spill_rebuilds += 1
+                es = self.builder(e)
+                save_epoch_npz(path, es)
+                return es
+        if self.builder is not None:                    # device-resident
+            return self.builder(e)
+        raise RuntimeError(
+            f"epoch {e} has no payload, spill_dir, or builder")
 
     def _meta(self) -> List[Tuple[int, List[int]]]:
         if self.epoch_meta is None:     # schedules built before the cache
@@ -374,11 +455,13 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     finally:
         if writer is not None:
             writer.close()
-    builder: Optional[Callable[[int], EpochSchedule]] = None
-    if lazy:
-        def builder(e: int) -> EpochSchedule:
-            return _build_epoch(sampler, pg, worker, s0, e, train_nodes,
-                                n_hot, compiler=compiler)
+
+    # the builder closure is ALWAYS attached: it is the payload source in
+    # lazy mode and the spill heal path otherwise (a corrupt/missing npz
+    # rebuilds bit-identically from (s0, worker, e) -- Prop 3.1)
+    def builder(e: int) -> EpochSchedule:
+        return _build_epoch(sampler, pg, worker, s0, e, train_nodes,
+                            n_hot, compiler=compiler)
     return WorkerSchedule(worker=worker, s0=s0, n_hot=n_hot, epochs=epochs,
                           spill_dir=spill_dir, epoch_meta=epoch_meta,
                           builder=builder)

@@ -35,18 +35,26 @@ from __future__ import annotations
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Sequence
+from concurrent.futures import TimeoutError as FuturesTimeout
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.schedule import WorkerSchedule, merge_pad_bounds
+from repro.fault.inject import TransientFault, fault_point
 from repro.models.gnn import GNNConfig, init_params
 from repro.dist.gnn_step import (DeviceCache, DeviceView,
                                  collate_device_epoch, empty_caches,
                                  epoch_k_max, make_ondemand_epoch,
                                  make_pipelined_epoch, stack_caches)
+from repro.train.checkpoint import save_run_state
+
+
+class StagingError(RuntimeError):
+    """Epoch staging failed persistently (retry budget exhausted or a
+    non-transient error); the original failure rides as ``__cause__``."""
 
 
 @dataclasses.dataclass
@@ -66,6 +74,12 @@ class DeviceEpochReport:
     #: (what a synchronous stage would add to the critical path is
     #: ``stage_s``; the overlap hides ``stage_s - exposed_stage_s``).
     exposed_stage_s: float = 0.0
+    #: 1 when this epoch ran in a degraded mode (e.g. staged cache lost
+    #: -> uncached baseline-style epoch), with the reason alongside
+    degraded: int = 0
+    degrade_reason: str = ""
+    #: staging retries spent producing THIS epoch's buffers
+    stage_retries: int = 0
 
     @property
     def total_miss_lanes(self) -> int:
@@ -86,7 +100,10 @@ class DeviceEpochReport:
                 "accs": [float(x) for x in self.accs],
                 "wall_time_s": float(self.wall_time_s),
                 "stage_s": float(self.stage_s),
-                "exposed_stage_s": float(self.exposed_stage_s)}
+                "exposed_stage_s": float(self.exposed_stage_s),
+                "degraded": int(self.degraded),
+                "degrade_reason": self.degrade_reason,
+                "stage_retries": int(self.stage_retries)}
 
 
 class _DeviceRunnerBase:
@@ -98,8 +115,25 @@ class _DeviceRunnerBase:
     def __init__(self, schedules: Sequence[WorkerSchedule], dv: DeviceView,
                  cfg: GNNConfig, opt, mesh, batch_size: int,
                  labels: np.ndarray, seed: int = 0,
-                 assemble_backend: str = "auto"):
+                 assemble_backend: str = "auto", *,
+                 stage_deadline_s: Optional[float] = None,
+                 max_stage_retries: int = 2,
+                 stage_retry_base_s: float = 0.01,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1):
         self.assemble_backend = assemble_backend
+        # supervision knobs (DESIGN.md §10): a deadline on the overlapped
+        # stage future, a bounded retry budget for transient stage
+        # failures, and optional periodic atomic run-state checkpoints
+        self.stage_deadline_s = stage_deadline_s
+        self.max_stage_retries = max_stage_retries
+        self.stage_retry_base_s = stage_retry_base_s
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.stage_retries = 0
+        self.degraded_epochs = 0
+        self.deadline_overruns = 0
+        self.recovery_wall_s = 0.0
         self.schedules = list(schedules)
         self.P = len(self.schedules)
         if mesh.devices.size != self.P:
@@ -163,7 +197,8 @@ class _DeviceRunnerBase:
 
     # -- per-epoch staging (the host half of the double buffer) ---------
 
-    def _stage(self, e: int) -> Dict[str, Any]:
+    def _stage(self, e: int, attempt: int = 0) -> Dict[str, Any]:
+        fault_point("stage", attempt=attempt, epoch=e)
         t0 = time.perf_counter()
         out = self._stage_inner(e)
         dt = time.perf_counter() - t0
@@ -189,10 +224,80 @@ class _DeviceRunnerBase:
             "wire_rows": (S + self.pulls_beyond_steps) * P_ * P_ * k,
         }
         if self.uses_cache:
-            cids, cfeats = stack_caches(caches, self.dv, self.n_hot)
-            staged["cids"] = jnp.asarray(cids)
-            staged["cfeats"] = jnp.asarray(cfeats)
+            # the staged C_s can be LOST (fault plane): the epoch then
+            # degrades to an uncached rebuild instead of failing the run
+            if fault_point("stage_cache", epoch=e):
+                staged["cache_lost"] = True
+            else:
+                cids, cfeats = stack_caches(caches, self.dv, self.n_hot)
+                staged["cids"] = jnp.asarray(cids)
+                staged["cfeats"] = jnp.asarray(cfeats)
         return staged
+
+    def _stage_supervised(self, e: int, start_attempt: int = 0
+                          ) -> Tuple[Dict[str, Any], int]:
+        """Stage epoch ``e`` with a bounded transient-retry budget.
+
+        Returns ``(staged, retries_used)``. Staging is deterministic
+        given ``(schedule, e)``, so a retried or eagerly-rebuilt stage is
+        bit-identical to the one the background thread would have built.
+        """
+        err: Optional[BaseException] = None
+        for i in range(self.max_stage_retries + 1):
+            if i:
+                time.sleep(self.stage_retry_base_s * 2 ** (i - 1))
+                self.stage_retries += 1
+            try:
+                return self._stage(e, attempt=start_attempt + i), i
+            except TransientFault as exc:
+                err = exc
+        raise StagingError(f"staging epoch {e} failed after "
+                           f"{self.max_stage_retries} retries") from err
+
+    def _await_stage(self, fut, e: int) -> Tuple[Dict[str, Any], int]:
+        """Collect the overlapped stage of epoch ``e``; on deadline
+        overrun or a dead staging thread, rebuild EAGERLY on the critical
+        path (counted in ``recovery_wall_s``) -- graceful degradation,
+        never a different schedule."""
+        try:
+            return fut.result(timeout=self.stage_deadline_s), 0
+        except FuturesTimeout:
+            self.deadline_overruns += 1
+        except Exception:
+            pass    # dead stage thread: the eager rebuild retries fresh
+        t0 = time.perf_counter()
+        # start_attempt=1: the background attempt 0 already fired, so a
+        # transient fault keyed to attempt 0 clears here deterministically
+        staged, retries = self._stage_supervised(e, start_attempt=1)
+        self.recovery_wall_s += time.perf_counter() - t0
+        self.stage_retries += 1
+        return staged, retries + 1
+
+    def _degrade_uncached(self, e: int) -> Dict[str, Any]:
+        """Rebuild epoch ``e`` with EMPTY caches after the staged C_s was
+        lost: every remote id goes through the pull pipeline for this one
+        epoch (baseline-style, counted as degraded). The lane bound may
+        grow past the cached ``k_max``, which costs at most ONE extra XLA
+        trace for the degraded epoch; feature values are unchanged, so
+        the loss curve still matches the clean run bit-for-bit."""
+        es_list = [ws.epoch(e) for ws in self.schedules]
+        d = self.dv.table.shape[-1]
+        caches = empty_caches(self.P, d)
+        k = max(self.k_max, epoch_k_max(es_list, caches, self.dv))
+        batches = collate_device_epoch(
+            es_list, caches, self.dv, self.labels, self.batch_size,
+            self.m_max, self.edge_max, k, self.num_steps)
+        lanes = batches["send_mask"].sum(axis=(0, 2, 3)).astype(np.int64)
+        S, P_, _, k_ = batches["send_mask"].shape
+        cids, cfeats = stack_caches(caches, self.dv, self.n_hot)
+        return {
+            "batches": jax.tree.map(jnp.asarray, batches),
+            "lanes": lanes,
+            "wire_rows": (S + self.pulls_beyond_steps) * P_ * P_ * k_,
+            "cids": jnp.asarray(cids),
+            "cfeats": jnp.asarray(cfeats),
+            "stage_s": 0.0,
+        }
 
     # -- the epoch loop --------------------------------------------------
 
@@ -217,22 +322,34 @@ class _DeviceRunnerBase:
         table = jnp.asarray(self.dv.table)
         offsets = jnp.asarray(self.dv.offsets)
         reports: List[DeviceEpochReport] = []
-        staged = self._stage(start_epoch)   # bootstrap C_s (Alg. 1 l.4)
+        # bootstrap C_s (Alg. 1 l.4), supervised: transient stage faults
+        # retry in place instead of killing the run
+        staged, pending_retries = self._stage_supervised(start_epoch)
         with self.mesh, ThreadPoolExecutor(max_workers=1) as pool:
             for e in range(start_epoch, stop_epoch):
                 t0 = time.perf_counter()
+                degraded, reason = 0, ""
+                if self.uses_cache and staged.get("cache_lost"):
+                    # staged cache lost: run e UNCACHED (one degraded
+                    # epoch, Alg. 1 degenerating to the baseline path)
+                    t_rec = time.perf_counter()
+                    staged = self._degrade_uncached(e)
+                    self.recovery_wall_s += time.perf_counter() - t_rec
+                    self.degraded_epochs += 1
+                    degraded, reason = 1, "cache_lost"
                 params, opt_state, losses, accs = self._run_epoch(
                     params, opt_state, table, offsets, staged)
                 # dispatch is async: a background thread stages epoch
                 # e+1 (lazy schedule build + C_sec + plans) WHILE the
                 # device trains epoch e. numpy/XLA release the GIL, so
                 # the two genuinely overlap even single-host ...
-                fut = (pool.submit(self._stage, e + 1)
+                fut = (pool.submit(self._stage, e + 1, 0)
                        if e + 1 < stop_epoch else None)
                 losses = np.asarray(losses)     # block on the device epoch
                 accs = np.asarray(accs)
                 t_done = time.perf_counter()
-                nxt = fut.result() if fut is not None else None
+                nxt, nxt_retries = ((None, 0) if fut is None
+                                    else self._await_stage(fut, e + 1))
                 exposed = (time.perf_counter() - t_done
                            if fut is not None else 0.0)
                 self.exposed_stage_s += exposed
@@ -243,8 +360,20 @@ class _DeviceRunnerBase:
                     losses=losses, accs=accs,
                     wall_time_s=time.perf_counter() - t0,
                     stage_s=(nxt["stage_s"] if nxt is not None else 0.0),
-                    exposed_stage_s=exposed))
-                staged = nxt            # ... and swap at the boundary
+                    exposed_stage_s=exposed,
+                    degraded=degraded, degrade_reason=reason,
+                    stage_retries=pending_retries))
+                self.params, self.opt_state = params, opt_state
+                if (self.checkpoint_dir is not None
+                        and (e + 1) % self.checkpoint_every == 0):
+                    # atomic run-state commit; the crash probe AFTER it
+                    # models dying between epochs -- resume picks up from
+                    # LATEST and the stitched loss curve is bit-equal
+                    save_run_state(self.checkpoint_dir,
+                                   {"params": params, "opt": opt_state},
+                                   step=e + 1)
+                    fault_point("run_crash", epoch=e + 1)
+                staged, pending_retries = nxt, nxt_retries
         self.params, self.opt_state = params, opt_state
         return reports
 

@@ -12,31 +12,35 @@ Entry point: ``python -m repro.eval.campaign --fast`` (or ``--full``);
 artifact: ``artifacts/BENCH_paper.json``.
 """
 from repro.eval.spec import (CellSpec, CampaignSpec, grid, fast_grid,
-                             full_grid, tiny_host_grid, HOST_SYSTEMS,
-                             DEVICE_SYSTEMS)
+                             fault_grid, full_grid, tiny_host_grid,
+                             HOST_SYSTEMS, DEVICE_SYSTEMS)
 from repro.eval.cells import (CellResult, run_host_cell,
                               run_device_cells, device_cell_result)
 from repro.eval.differential import (CheckResult, verify_cells,
+                                     verify_fault_pairs,
                                      check_cell_internal,
                                      check_backend_pair,
                                      check_system_pair, all_pass,
                                      failures)
-from repro.eval.report import (SCHEMA, PAPER_TARGETS, derive_pair,
-                               derive_pairs, build_report, write_report,
-                               validate_report)
+from repro.eval.report import (SCHEMA, FAULT_SCHEMA, PAPER_TARGETS,
+                               derive_pair, derive_pairs, build_report,
+                               build_fault_report, write_report,
+                               validate_report, validate_fault_report)
 from repro.eval.replay import replay_device_bytes
 # NOTE: repro.eval.campaign (the CLI + run_campaign) is intentionally
 # NOT imported here: `python -m repro.eval.campaign` would otherwise
 # re-import it under two names (runpy RuntimeWarning).
 
 __all__ = [
-    "CellSpec", "CampaignSpec", "grid", "fast_grid", "full_grid",
-    "tiny_host_grid", "HOST_SYSTEMS", "DEVICE_SYSTEMS",
+    "CellSpec", "CampaignSpec", "grid", "fast_grid", "fault_grid",
+    "full_grid", "tiny_host_grid", "HOST_SYSTEMS", "DEVICE_SYSTEMS",
     "CellResult", "run_host_cell", "run_device_cells",
     "device_cell_result",
-    "CheckResult", "verify_cells", "check_cell_internal",
-    "check_backend_pair", "check_system_pair", "all_pass", "failures",
-    "SCHEMA", "PAPER_TARGETS", "derive_pair", "derive_pairs",
-    "build_report", "write_report", "validate_report",
+    "CheckResult", "verify_cells", "verify_fault_pairs",
+    "check_cell_internal", "check_backend_pair", "check_system_pair",
+    "all_pass", "failures",
+    "SCHEMA", "FAULT_SCHEMA", "PAPER_TARGETS", "derive_pair",
+    "derive_pairs", "build_report", "build_fault_report",
+    "write_report", "validate_report", "validate_fault_report",
     "replay_device_bytes",
 ]

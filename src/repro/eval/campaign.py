@@ -28,15 +28,17 @@ import os
 import sys
 from typing import Callable, List, Optional
 
-from repro.eval.spec import CampaignSpec, fast_grid, full_grid
+from repro.eval.spec import CampaignSpec, fast_grid, fault_grid, full_grid
 from repro.eval.cells import (CellResult, run_host_cell,
                               run_device_cells, device_child_main)
-from repro.eval.differential import verify_cells
-from repro.eval.report import build_report, write_report
+from repro.eval.differential import verify_cells, verify_fault_pairs
+from repro.eval.report import (build_fault_report, build_report,
+                               validate_fault_report, write_report)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__)))))
 DEFAULT_OUT = os.path.join(ROOT, "artifacts", "BENCH_paper.json")
+FAULT_OUT = os.path.join(ROOT, "artifacts", "BENCH_fault.json")
 
 
 def run_campaign(spec: CampaignSpec, include_device: bool = True,
@@ -70,6 +72,55 @@ def run_campaign(spec: CampaignSpec, include_device: bool = True,
         write_report(report, out_path)
         log(f"[out] {out_path}")
     return report
+
+
+def run_fault_campaign(include_device: bool = True,
+                       out_path: Optional[str] = None,
+                       log: Callable[[str], None] = lambda s: None
+                       ) -> dict:
+    """The fault campaign (ISSUE: robustness): the fast-grid rapidgnn
+    scenario re-run under named fault profiles, each injection verified
+    to (a) fire and (b) recover bit-exactly against its clean twin.
+    Artifact: ``artifacts/BENCH_fault.json``."""
+    spec = fault_grid()
+    cells: List[CellResult] = []
+    for c in spec.host_cells():
+        log(f"[cell] {c.label()} ...")
+        cells.append(run_host_cell(c))
+        log(f"[cell] {c.label()} done: fires={cells[-1].fault_events} "
+            f"degraded={cells[-1].degraded_epochs}")
+    dev = spec.device_cells()
+    if dev and include_device:
+        log(f"[cell] {len(dev)} device cell(s) via subprocess ...")
+        cells.extend(run_device_cells(dev))
+        for c in cells[-len(dev):]:
+            log(f"[cell] {c.spec['backend']}/"
+                f"{c.spec.get('fault_profile', 'none')} done: "
+                f"fires={c.fault_events} degraded={c.degraded_epochs} "
+                f"retries={c.stage_retries}")
+    checks = verify_cells(cells) + verify_fault_pairs(cells)
+    report = build_fault_report(spec.name, cells, checks)
+    if out_path:
+        write_report(report, out_path)
+        log(f"[out] {out_path}")
+    return report
+
+
+def _print_fault_report(report: dict) -> None:
+    print(f"campaign={report['campaign']} cells={report['num_cells']}")
+    for r in report["fault_summary"]:
+        print(f"  {r['backend']:6s} f={r['fault_profile']:15s} "
+              f"fires={r['fault_events']} degraded={r['degraded_epochs']} "
+              f"retries={r['retry_total']} "
+              f"recovery_wall={r['recovery_wall_s']}s")
+    n_fail = sum(1 for c in report["differential"]
+                 if c["status"] == "FAIL")
+    n_pass = sum(1 for c in report["differential"]
+                 if c["status"] == "PASS")
+    print(f"differential: {n_pass} passed, {n_fail} failed")
+    for c in report["differential"]:
+        if c["status"] == "FAIL":
+            print(f"  FAIL {c['check']} @ {c['cell']}: {c['detail']}")
 
 
 def _print_report(report: dict) -> None:
@@ -111,6 +162,9 @@ def main(argv=None) -> int:
                     help="paper-scale host grid + device pair (slow)")
     ap.add_argument("--host-only", action="store_true",
                     help="skip device-backend cells (no subprocess)")
+    ap.add_argument("--fault", action="store_true",
+                    help="run the fault-injection campaign instead "
+                         "(artifacts/BENCH_fault.json)")
     ap.add_argument("--loop-sampler", action="store_true",
                     help="build schedules with the per-batch oracle "
                          "sampler instead of the batched compiler")
@@ -133,6 +187,18 @@ def main(argv=None) -> int:
     if args.device_child:
         device_child_main(*args.device_child)
         return 0
+
+    if args.fault:
+        out = (args.out if args.out != DEFAULT_OUT else FAULT_OUT)
+        report = run_fault_campaign(include_device=not args.host_only,
+                                    out_path=out, log=print)
+        _print_fault_report(report)
+        probs = validate_fault_report(report)
+        for p in probs:
+            print(f"  INVALID: {p}")
+        if not report["all_checks_pass"]:
+            print("recovery FAILED: fault campaign checks did not pass")
+        return 0 if report["all_checks_pass"] and not probs else 1
 
     spec = full_grid() if args.full else fast_grid()
     if args.loop_sampler:

@@ -78,6 +78,20 @@ class CellResult:
     #: staging wall left exposed after training (device backend with
     #: background staging; ~stage_time_s on the legacy synchronous path)
     exposed_stage_s: float = 0.0
+    #: fault-plane accounting (DESIGN.md §10); all zero on clean cells.
+    #: ``fault_events`` counts injections that actually fired, the rest
+    #: count the recoveries they forced: degraded epochs (stale C_sec /
+    #: lost staged cache), bounded retries per site, spill heals,
+    #: stage-deadline overruns, and the wall spent recovering.
+    degraded_epochs: int = 0
+    stage_retries: int = 0
+    pull_retries: int = 0
+    prefetch_retries: int = 0
+    csec_degraded: int = 0
+    spill_rebuilds: int = 0
+    deadline_overruns: int = 0
+    recovery_wall_s: float = 0.0
+    fault_events: int = 0
 
     @property
     def backend(self) -> str:
@@ -125,9 +139,12 @@ def run_host_cell(spec: CellSpec, worker: int = 0,
     from repro.models import (GNNConfig, init_params, make_train_step,
                               batch_to_device)
     from repro.train import AdamW
+    from repro.fault import active_plan, plan_from_profile
 
     if spec.backend != "host":
         raise ValueError(f"run_host_cell got backend {spec.backend!r}")
+    plan = (plan_from_profile(spec.fault_profile, seed=spec.fault_seed)
+            if spec.fault_profile != "none" else None)
     g = load_dataset(spec.dataset)
     pg = partition_graph(g, spec.workers, spec.partition_method)
     fanouts = (50, 50) if spec.system == "gcn" else spec.fanouts
@@ -175,29 +192,38 @@ def run_host_cell(spec: CellSpec, worker: int = 0,
             runner = BaselineRunner(ws, store,
                                     batch_size=spec.batch_size,
                                     train_fn=train_fn)
-        m = runner.run()
+        with active_plan(plan):     # None-tolerant: no-op when clean
+            m = runner.run()
         runs.append((m, state["losses"], state["accs"],
                      getattr(runner, "device_cache_bytes", 0),
                      [ws.epoch(e).num_batches
-                      for e in range(spec.epochs)]))
+                      for e in range(spec.epochs)],
+                     int(ws.spill_rebuilds)))
 
-    return _host_cell_result(spec, g, workers, runs)
+    return _host_cell_result(spec, g, workers, runs,
+                             fault_events=plan.total_fires() if plan
+                             else 0)
 
 
-def _host_cell_result(spec: CellSpec, g, workers, runs) -> CellResult:
+def _host_cell_result(spec: CellSpec, g, workers, runs,
+                      fault_events: int = 0) -> CellResult:
     E = spec.epochs
     tot: Dict[str, float] = {k: 0 for k in (
         "rpc_count", "remote_requests", "cache_hits", "cache_misses",
         "remote_bytes", "vector_pull_bytes", "sync_net_time_s",
-        "warm_sync_net_time_s", "modeled_net_time_s")}
+        "warm_sync_net_time_s", "modeled_net_time_s", "pull_retries",
+        "prefetch_retries", "csec_degraded")}
     miss = np.zeros((E, len(workers)), np.int64)
     wall = warm_wall = 0.0
     num_steps = warm_steps = 0
-    for i, (m, _, _, _, steps_per_epoch) in enumerate(runs):
+    spill_rebuilds = sum(r[5] for r in runs if len(r) > 5)
+    for i, (m, *_rest) in enumerate(runs):
+        steps_per_epoch = _rest[3]
         t = m.totals()
         for k in ("rpc_count", "remote_requests", "cache_hits",
                   "cache_misses", "remote_bytes", "vector_pull_bytes",
-                  "sync_net_time_s", "modeled_net_time_s"):
+                  "sync_net_time_s", "modeled_net_time_s",
+                  "pull_retries", "prefetch_retries", "csec_degraded"):
             tot[k] += t[k]
         warm_eps = m.epochs[1:] if E > 1 else m.epochs
         tot["warm_sync_net_time_s"] += sum(e.sync_net_time_s
@@ -231,7 +257,14 @@ def _host_cell_result(spec: CellSpec, g, workers, runs) -> CellResult:
         miss_matrix=miss.tolist(), losses=list(losses), accs=list(accs),
         energy=_energy(spec, warm_wall),
         epoch_metrics=runs[0][0].to_dict()["epochs"],
-        device_cache_bytes=max(r[3] for r in runs))
+        device_cache_bytes=max(r[3] for r in runs),
+        # a degraded host epoch == one that kept a stale steady cache
+        degraded_epochs=int(tot["csec_degraded"]),
+        pull_retries=int(tot["pull_retries"]),
+        prefetch_retries=int(tot["prefetch_retries"]),
+        csec_degraded=int(tot["csec_degraded"]),
+        spill_rebuilds=spill_rebuilds,
+        fault_events=fault_events)
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +358,7 @@ def _run_device_cell(spec: CellSpec, sc: dict) -> CellResult:
     from repro.models import GNNConfig
     from repro.train import AdamW
     from repro.dist import DeviceRapidGNNRunner, DeviceBaselineRunner
+    from repro.fault import active_plan, plan_from_profile
 
     g, schedules = sc["g"], sc["schedules"]
     cfg = GNNConfig(kind="sage", in_dim=g.feat_dim,
@@ -332,13 +366,19 @@ def _run_device_cell(spec: CellSpec, sc: dict) -> CellResult:
                     num_layers=len(spec.fanouts))
     cls = DeviceRapidGNNRunner if spec.is_rapid else DeviceBaselineRunner
     runner = cls(schedules, sc["dv"], cfg, AdamW(lr=3e-3), sc["mesh"],
-                 spec.batch_size, g.labels, seed=spec.seed)
-    reports = runner.run()
-    return device_cell_result(spec, g, schedules, runner, reports)
+                 spec.batch_size, g.labels, seed=spec.seed,
+                 stage_deadline_s=spec.stage_deadline_s)
+    plan = (plan_from_profile(spec.fault_profile, seed=spec.fault_seed)
+            if spec.fault_profile != "none" else None)
+    with active_plan(plan):
+        reports = runner.run()
+    return device_cell_result(spec, g, schedules, runner, reports,
+                              fault_events=plan.total_fires() if plan
+                              else 0)
 
 
 def device_cell_result(spec: CellSpec, g, schedules, runner,
-                       reports) -> CellResult:
+                       reports, fault_events: int = 0) -> CellResult:
     """Fold DeviceEpochReports into the unified cell schema.
 
     ``rpc_count``/``cache_misses``/``remote_bytes`` are the pull-lane
@@ -380,4 +420,10 @@ def device_cell_result(spec: CellSpec, g, schedules, runner,
         wire_rows=sum(int(r.wire_rows) for r in reports),
         trace_count=int(runner.trace_count),
         stage_time_s=float(runner.stage_time_s),
-        exposed_stage_s=float(runner.exposed_stage_s))
+        exposed_stage_s=float(runner.exposed_stage_s),
+        degraded_epochs=sum(r.degraded for r in reports),
+        stage_retries=int(getattr(runner, "stage_retries", 0)),
+        spill_rebuilds=sum(int(ws.spill_rebuilds) for ws in schedules),
+        deadline_overruns=int(getattr(runner, "deadline_overruns", 0)),
+        recovery_wall_s=float(getattr(runner, "recovery_wall_s", 0.0)),
+        fault_events=fault_events)

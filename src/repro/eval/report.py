@@ -33,7 +33,11 @@ from typing import Dict, List, Sequence
 from repro.eval.cells import CellResult
 from repro.eval.differential import CheckResult, all_pass
 
-SCHEMA = "rapidgnn.bench_paper/v1"
+#: v2 adds the fault/degradation counters (degraded_epochs, retry
+#: totals, recovery_wall_s, fault_events) to every cell record.
+SCHEMA = "rapidgnn.bench_paper/v2"
+#: BENCH_fault.json: the fault campaign's recovery scorecard.
+FAULT_SCHEMA = "rapidgnn.bench_fault/v1"
 
 #: the paper's headline claims, pinned so readers of the artifact can
 #: compare without the PDF (ranges are across its dataset grid).
@@ -48,7 +52,10 @@ _REQUIRED_CELL_FIELDS = (
     "spec", "feat_dim", "num_steps", "warm_steps", "wall_time_s",
     "warm_wall_s", "step_time_ms", "rpc_count", "remote_bytes",
     "vector_pull_bytes", "payload_bytes", "miss_matrix", "losses",
-    "energy", "hit_rate")
+    "energy", "hit_rate",
+    # v2: fault/degradation counters
+    "degraded_epochs", "stage_retries", "pull_retries",
+    "prefetch_retries", "recovery_wall_s", "fault_events")
 _REQUIRED_PAIR_FIELDS = (
     "backend", "baseline_system", "scenario", "throughput_speedup",
     "fetch_reduction_x", "bytes_reduction_x", "energy")
@@ -136,6 +143,85 @@ def build_report(campaign: str, cells: Sequence[CellResult],
         "differential": [c.to_dict() for c in checks],
         "all_checks_pass": all_pass(checks),
     }
+
+
+def build_fault_report(campaign: str, cells: Sequence[CellResult],
+                       checks: Sequence[CheckResult]) -> Dict:
+    """BENCH_fault.json: per-cell recovery scorecard + the differential
+    checks (including the ``fault_*`` recovery layer). No headline
+    pairs -- the fault grid is rapidgnn-only by construction."""
+    rows = []
+    for c in cells:
+        s = c.spec
+        rows.append({
+            "cell": f"{c.backend}/{s.get('fault_profile', 'none')}",
+            "backend": c.backend,
+            "fault_profile": s.get("fault_profile", "none"),
+            "fault_seed": s.get("fault_seed", 0),
+            "fault_events": c.fault_events,
+            "degraded_epochs": c.degraded_epochs,
+            "stage_retries": c.stage_retries,
+            "pull_retries": c.pull_retries,
+            "prefetch_retries": c.prefetch_retries,
+            "csec_degraded": c.csec_degraded,
+            "spill_rebuilds": c.spill_rebuilds,
+            "deadline_overruns": c.deadline_overruns,
+            "recovery_wall_s": round(c.recovery_wall_s, 6),
+            "retry_total": (c.stage_retries + c.pull_retries
+                            + c.prefetch_retries),
+        })
+    return {
+        "schema": FAULT_SCHEMA,
+        "campaign": campaign,
+        "created_unix": time.time(),
+        "num_cells": len(cells),
+        "cells": [c.to_dict() for c in cells],
+        "fault_summary": rows,
+        "differential": [c.to_dict() for c in checks],
+        "all_checks_pass": all_pass(checks),
+    }
+
+
+def validate_fault_report(report: Dict) -> List[str]:
+    """Schema check for BENCH_fault.json. Beyond shape, enforces the
+    campaign's reason to exist: at least one cell must have actually
+    DEGRADED and recovered (a fault grid where nothing fires proves
+    nothing)."""
+    probs: List[str] = []
+    for key in ("schema", "campaign", "num_cells", "cells",
+                "fault_summary", "differential", "all_checks_pass"):
+        if key not in report:
+            probs.append(f"missing top-level key {key!r}")
+    if probs:
+        return probs
+    if report["schema"] != FAULT_SCHEMA:
+        probs.append(f"schema {report['schema']!r} != {FAULT_SCHEMA!r}")
+    if report["num_cells"] != len(report["cells"]):
+        probs.append("num_cells does not match len(cells)")
+    for i, cell in enumerate(report["cells"]):
+        for f in _REQUIRED_CELL_FIELDS:
+            if f not in cell:
+                probs.append(f"cells[{i}] missing {f!r}")
+    for i, row in enumerate(report["fault_summary"]):
+        for f in ("fault_profile", "fault_events", "degraded_epochs",
+                  "retry_total", "recovery_wall_s"):
+            if f not in row:
+                probs.append(f"fault_summary[{i}] missing {f!r}")
+    faulted = [r for r in report["fault_summary"]
+               if r.get("fault_profile", "none") != "none"]
+    if not faulted:
+        probs.append("no faulted cells in the fault campaign")
+    if not any(r.get("fault_events", 0) > 0 for r in faulted):
+        probs.append("no fault actually fired across the campaign")
+    if not any(r.get("degraded_epochs", 0) > 0
+               for r in report["fault_summary"]):
+        probs.append("no cell degraded an epoch -- the campaign must "
+                     "exercise at least one degraded recovery")
+    for i, chk in enumerate(report["differential"]):
+        if chk.get("status") not in ("PASS", "FAIL", "SKIP"):
+            probs.append(f"differential[{i}] bad status "
+                         f"{chk.get('status')!r}")
+    return probs
 
 
 def write_report(report: Dict, path: str) -> str:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 #: host-sim systems (benchmarks §5.1 naming); the device backend
 #: realises the first two (rapid vs on-demand baseline) on the mesh.
@@ -54,6 +54,16 @@ class CellSpec:
     #: device backend. Same bit-parity contract as ``schedule_compiler``,
     #: so likewise EXCLUDED from ``scenario_key()``.
     schedule_backend: str = "numpy"
+    #: fault-plane profile (repro.fault.plan.PROFILES) activated around
+    #: this cell's runs; "none" = clean. Faulted cells are a DIFFERENT
+    #: scenario from clean ones (they may degrade epochs), so both fault
+    #: fields ARE part of ``scenario_key()``; ``verify_fault_pairs``
+    #: compares a faulted cell to its clean twin by neutralizing them.
+    fault_profile: str = "none"
+    fault_seed: int = 0
+    #: deadline on the device runner's overlapped stage future (None =
+    #: wait forever); a timing knob, NOT part of the scenario key.
+    stage_deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if self.backend not in ("host", "device"):
@@ -68,6 +78,11 @@ class CellSpec:
         if self.schedule_backend not in ("numpy", "device"):
             raise ValueError(f"unknown schedule_backend "
                              f"{self.schedule_backend!r}")
+        if self.fault_profile != "none":
+            from repro.fault.plan import PROFILES
+            if self.fault_profile not in PROFILES:
+                raise ValueError(f"unknown fault_profile "
+                                 f"{self.fault_profile!r}")
         object.__setattr__(self, "fanouts", tuple(self.fanouts))
 
     @property
@@ -101,12 +116,16 @@ class CellSpec:
         grid-level ratio pairing (repro.eval.report) may compare them."""
         return (self.dataset, self.batch_size, self.workers, self.n_hot,
                 self.epochs, self.seed, self.effective_fanouts,
-                self.partition_method)
+                self.partition_method, self.fault_profile,
+                self.fault_seed)
 
     def label(self) -> str:
-        return (f"{self.backend}/{self.system}/{self.dataset}"
+        base = (f"{self.backend}/{self.system}/{self.dataset}"
                 f"/b{self.batch_size}/w{self.workers}/h{self.n_hot}"
                 f"/e{self.epochs}")
+        if self.fault_profile != "none":
+            base += f"/f{self.fault_profile}"
+        return base
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -178,6 +197,29 @@ def full_grid() -> CampaignSpec:
                n_hots=(64,), epochs=3, seed=42, fanouts=(5, 5),
                partition="greedy")
     return CampaignSpec(name="full", cells=tuple(host + dev))
+
+
+def fault_grid(fault_seed: int = 7) -> CampaignSpec:
+    """Fault campaign (BENCH_fault.json): the fast-grid rapidgnn
+    scenario re-run under named fault profiles on both backends, each
+    faulted cell paired with a clean twin for bit-parity verification.
+    Device profiles exercise staging/caching/crash sites, host profiles
+    the prefetch/pull/C_sec sites; ``cache-loss`` guarantees the report
+    its >=1 degraded-epoch cell."""
+    common = dict(dataset="tiny", batch_size=16, workers=4, n_hot=64,
+                  epochs=3, seed=42, fanouts=(5, 5), partition="greedy")
+    cells = []
+    for prof in ("none", "cache-loss", "stage-flaky"):
+        cells.append(CellSpec(backend="device", system="rapidgnn",
+                              fault_profile=prof,
+                              fault_seed=0 if prof == "none"
+                              else fault_seed, **common))
+    for prof in ("none", "csec-loss", "pull-flaky", "prefetch-flaky"):
+        cells.append(CellSpec(backend="host", system="rapidgnn",
+                              fault_profile=prof,
+                              fault_seed=0 if prof == "none"
+                              else fault_seed, **common))
+    return CampaignSpec(name="fault", cells=tuple(cells))
 
 
 def tiny_host_grid(epochs: int = 2) -> CampaignSpec:

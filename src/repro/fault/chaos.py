@@ -1,0 +1,208 @@
+"""Chaos harness: sweep seeded fault plans through the host-sim runner.
+
+``python -m repro.fault.chaos --seed N`` runs the tiny-graph RapidGNN
+scenario (worker 0 of a 4-way greedy partition, 3 epochs, disk spill ON
+so the spill heal path is exercised) once CLEAN to get the oracle loss
+curve, then once per named host profile and per ``random_plan`` drawn
+from the chaos pool. The robustness contract (DESIGN.md §10) is binary
+per run:
+
+  * the run COMPLETES -> its loss curve must be BIT-equal to the oracle
+    (every tolerated fault recovers losslessly), or
+  * the run raises one of the TYPED fault-plane errors -- never a raw
+    numpy/OS error, never a hang, never a silent divergence.
+
+A final checkpoint-atomicity drill crashes ``save_run_state`` between
+the arrays commit and the manifest commit and proves ``LATEST`` still
+resolves to the previous, bit-intact checkpoint.
+
+Any violation prints a ``recovery FAILED`` line (CI greps for it) and
+the CLI exits non-zero. Fault plans are Philox-keyed from the CLI seed
+(§2.2 RNG contract), so every sweep replays bit-exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.fault.inject import active_plan
+from repro.fault.plan import (FaultPlan, InjectedCrash, InjectedFault,
+                              plan_from_profile, random_plan)
+
+#: named host-side profiles the sweep always covers (chaos adds random
+#: plans on top). ``ckpt-crash``/``run-crash`` are exercised by the
+#: checkpoint drill / device suite, not the host epoch loop.
+HOST_SWEEP = ("pull-flaky", "pull-dead", "prefetch-flaky",
+              "prefetch-fatal", "prefetch-hang", "csec-loss",
+              "spill-rot", "spill-trunc", "spill-gone")
+
+#: the ONLY exceptions a faulted run may surface: the fault-plane's own
+#: errors plus the typed detection/supervision errors of each site.
+#: PrefetchStall subclasses TimeoutError; TransientFault/FatalFault/
+#: InjectedCrash subclass InjectedFault.
+def _allowed_errors() -> tuple:
+    from repro.core.prefetch import (PrefetchWorkerError,
+                                     SecondaryCacheError)
+    from repro.core.schedule import SpillCorruptError
+    from repro.train.checkpoint import CheckpointCorruptError
+    return (InjectedFault, PrefetchWorkerError, SecondaryCacheError,
+            SpillCorruptError, CheckpointCorruptError, TimeoutError)
+
+
+class _Chaos:
+    """One shared scenario (graph, partition, jitted train step) reused
+    by every plan in the sweep; each run rebuilds its schedule in a
+    fresh spill dir so file damage never leaks across runs."""
+
+    def __init__(self):
+        from repro.graph import KHopSampler, load_dataset, partition_graph
+        from repro.models import (GNNConfig, batch_to_device, init_params,
+                                  make_train_step)
+        from repro.train import AdamW
+
+        self.g = load_dataset("tiny")
+        self.pg = partition_graph(self.g, 4, "greedy")
+        self.sampler = KHopSampler(self.g, fanouts=[5, 5], batch_size=16)
+        self.cfg = GNNConfig(kind="sage", in_dim=self.g.feat_dim,
+                             hidden_dim=32,
+                             num_classes=self.g.num_classes,
+                             num_layers=2)
+        self.opt = AdamW(lr=3e-3)
+        self.step = make_train_step(self.cfg, self.opt)
+        self._init_params = init_params
+        self._to_device = batch_to_device
+
+    def run(self, plan: Optional[FaultPlan],
+            stall_timeout_s: float = 0.5) -> np.ndarray:
+        import jax
+
+        from repro.core import (NetworkModel, RapidGNNRunner,
+                                ShardedFeatureStore, build_schedule)
+
+        losses: List[float] = []
+        params = self._init_params(self.cfg, jax.random.key(42))
+        box = {"p": params, "o": self.opt.init(params)}
+
+        def train_fn(feats, cb):
+            batch = self._to_device(cb, feats)
+            box["p"], box["o"], aux = self.step(box["p"], box["o"], batch)
+            losses.append(float(aux["loss"]))
+            return losses[-1]
+
+        with tempfile.TemporaryDirectory() as td, active_plan(plan):
+            # schedule build is INSIDE the plan scope: spill_write
+            # damage lands at build time, detection+heal at epoch load
+            ws = build_schedule(self.sampler, self.pg, worker=0, s0=42,
+                                num_epochs=3, n_hot=64, spill_dir=td)
+            store = ShardedFeatureStore(self.pg, worker=0,
+                                        net=NetworkModel(enabled=False))
+            RapidGNNRunner(ws, store, batch_size=16, train_fn=train_fn,
+                           stall_timeout_s=stall_timeout_s).run()
+        return np.asarray(losses, np.float64)
+
+
+def _checkpoint_drill(log: Callable[[str], None]) -> bool:
+    """Crash ``save_run_state`` between arrays and manifest commits:
+    ``LATEST`` must keep naming the previous step, which must load back
+    bit-equal."""
+    from repro.train import latest_step, load_run_state, save_run_state
+
+    tree1 = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "b": np.zeros(3, np.float32)}
+    tree2 = {"w": tree1["w"] + 1.0, "b": tree1["b"] + 1.0}
+    with tempfile.TemporaryDirectory() as td:
+        save_run_state(td, tree1, step=1)
+        crashed = False
+        try:
+            with active_plan(plan_from_profile("ckpt-crash")):
+                save_run_state(td, tree2, step=2)
+        except InjectedCrash:
+            crashed = True
+        ok = crashed and latest_step(td) == 1
+        if ok:
+            like = {"w": np.zeros((2, 3), np.float32),
+                    "b": np.zeros(3, np.float32)}
+            tree, step = load_run_state(td, like)
+            ok = (step == 1
+                  and np.array_equal(np.asarray(tree["w"]), tree1["w"])
+                  and np.array_equal(np.asarray(tree["b"]), tree1["b"]))
+    if not ok:
+        log("recovery FAILED: checkpoint atomicity drill -- a crash "
+            "mid-commit must leave LATEST on the previous bit-intact "
+            "checkpoint")
+    return ok
+
+
+def run_chaos(seed: int = 0, fast: bool = False,
+              n_random: Optional[int] = None,
+              log: Callable[[str], None] = print) -> Dict:
+    """Run the full sweep; returns a JSON-ready summary with
+    ``ok=True`` iff every run either recovered bit-exactly or raised a
+    typed error, and the checkpoint drill passed."""
+    ch = _Chaos()
+    oracle = ch.run(None)
+    log(f"[chaos] oracle: {oracle.shape[0]} steps, "
+        f"final loss {oracle[-1]:.6f}")
+
+    plans = [plan_from_profile(p, seed=seed) for p in HOST_SWEEP]
+    if n_random is None:
+        n_random = 2 if fast else 8
+    plans += [random_plan(seed, i) for i in range(n_random)]
+    allowed = _allowed_errors()
+
+    runs: List[Dict] = []
+    bad: List[str] = []
+    for plan in plans:
+        try:
+            losses = ch.run(plan)
+        except allowed as exc:
+            outcome = f"typed:{type(exc).__name__}"
+        except BaseException as exc:   # untyped leak == contract breach
+            outcome = f"untyped:{type(exc).__name__}"
+            bad.append(plan.name)
+            log(f"recovery FAILED: plan {plan.name} leaked an untyped "
+                f"error {exc!r}")
+        else:
+            if (losses.shape == oracle.shape
+                    and np.array_equal(losses, oracle)):
+                outcome = "bit-equal"
+            else:
+                outcome = "diverged"
+                bad.append(plan.name)
+                log(f"recovery FAILED: plan {plan.name} completed with "
+                    f"a loss curve diverging from the oracle")
+        fires = plan.total_fires()
+        runs.append({"plan": plan.name, "fires": fires,
+                     "outcome": outcome,
+                     "snapshot": plan.snapshot()})
+        log(f"[chaos] {plan.name:18s} fires={fires:2d} {outcome}")
+
+    ckpt_ok = _checkpoint_drill(log)
+    ok = not bad and ckpt_ok
+    log(f"[chaos] {len(runs)} plans, {len(bad)} failures, "
+        f"checkpoint drill {'OK' if ckpt_ok else 'FAILED'}")
+    return {"seed": seed, "oracle_steps": int(oracle.shape[0]),
+            "runs": runs, "checkpoint_drill": ckpt_ok,
+            "failed_plans": bad, "ok": ok}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="RapidGNN fault-injection chaos sweep")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="Philox seed keying every fault plan")
+    ap.add_argument("--fast", action="store_true",
+                    help="2 random plans instead of 8")
+    ap.add_argument("--plans", type=int, default=None,
+                    help="override the random-plan count")
+    args = ap.parse_args(argv)
+    out = run_chaos(seed=args.seed, fast=args.fast, n_random=args.plans)
+    return 0 if out["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

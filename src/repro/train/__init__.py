@@ -1,5 +1,10 @@
 from repro.train.optim import AdamW, SGD, cosine_schedule, global_norm
-from repro.train.checkpoint import save_checkpoint, load_checkpoint, checkpoint_step
+from repro.train.checkpoint import (CheckpointCorruptError, checkpoint_step,
+                                    latest_step, load_checkpoint,
+                                    load_run_state, save_checkpoint,
+                                    save_run_state)
 
 __all__ = ["AdamW", "SGD", "cosine_schedule", "global_norm",
-           "save_checkpoint", "load_checkpoint", "checkpoint_step"]
+           "save_checkpoint", "load_checkpoint", "checkpoint_step",
+           "CheckpointCorruptError", "save_run_state", "load_run_state",
+           "latest_step"]

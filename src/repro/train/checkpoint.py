@@ -3,18 +3,35 @@
 Works for host numpy trees and for sharded jax.Arrays (each process saves
 the addressable shards it owns; restore re-assembles and re-shards with
 the provided sharding tree). No orbax dependency.
+
+Crash safety (DESIGN.md §10): every file is written tmp + fsync +
+rename, and the manifest is renamed LAST -- it is the commit marker, so
+a crash at any point leaves either the previous checkpoint or a
+complete new one, never a torn mix under the final names. Loads
+validate leaf set, shapes, manifest agreement, and (optionally) the
+step, raising ``CheckpointCorruptError`` instead of raw numpy errors.
+``save_run_state``/``load_run_state`` layer per-step directories and an
+atomic ``LATEST`` pointer on top for periodic crash-resume.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import zipfile
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.fault.inject import fault_point
+
 PyTree = Any
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity at load: torn archive, manifest
+    missing/disagreeing, leaf-set/shape/step mismatch."""
 
 
 def _flatten(tree: PyTree):
@@ -27,6 +44,16 @@ def _flatten(tree: PyTree):
     return flat, treedef
 
 
+def _commit_bytes(path: str, write_fn) -> None:
+    """Atomic file write: tmp + flush + fsync + rename."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
     os.makedirs(path, exist_ok=True)
     flat, _ = _flatten(tree)
@@ -37,24 +64,69 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
         arrays[key] = arr
         manifest["leaves"][key] = {"shape": list(arr.shape),
                                    "dtype": str(arr.dtype)}
-    # repro: allow(SPILL-SAFETY) -- checkpoint shards are flat ndarrays keyed by leaf path; allow_pickle stays off
-    np.savez(os.path.join(path, "arrays.npz"),
-             **{k.replace(_SEP, "::"): v for k, v in arrays.items()})
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    named = {k.replace(_SEP, "::"): v for k, v in arrays.items()}
+
+    def _write_arrays(f):
+        # repro: allow(SPILL-SAFETY) -- checkpoint shards are flat ndarrays keyed by leaf path; allow_pickle stays off
+        np.savez(f, **named)
+
+    _commit_bytes(os.path.join(path, "arrays.npz"), _write_arrays)
+    # crash probe between the two commits: dying here must leave any
+    # PREVIOUS checkpoint valid (the manifest rename below is the
+    # commit marker, so a stale manifest + new arrays cannot happen)
+    fault_point("checkpoint", epoch=step)
+    _commit_bytes(os.path.join(path, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest,
+                                               indent=1).encode()))
 
 
 def load_checkpoint(path: str, like: PyTree,
-                    shardings: Optional[PyTree] = None) -> PyTree:
-    # repro: allow(SPILL-SAFETY) -- reads back the flat npz checkpoint shards; allow_pickle stays off
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        data = {k.replace("::", _SEP): z[k] for k in z.files}
+                    shardings: Optional[PyTree] = None,
+                    expect_step: Optional[int] = None) -> PyTree:
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as exc:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint manifest {mpath}: {exc!r}") from exc
+    if expect_step is not None and manifest.get("step") != expect_step:
+        raise CheckpointCorruptError(
+            f"checkpoint step mismatch at {path}: manifest says "
+            f"{manifest.get('step')}, expected {expect_step}")
+    apath = os.path.join(path, "arrays.npz")
+    try:
+        # repro: allow(SPILL-SAFETY) -- reads back the flat npz checkpoint shards; allow_pickle stays off
+        with np.load(apath) as z:
+            data = {k.replace("::", _SEP): z[k] for k in z.files}
+    except (OSError, ValueError, KeyError, EOFError,
+            zipfile.BadZipFile) as exc:
+        raise CheckpointCorruptError(
+            f"torn checkpoint shards {apath}: {exc!r}") from exc
     flat_like, treedef = _flatten(like)
+    if set(data) != set(flat_like):
+        missing = sorted(set(flat_like) - set(data))[:4]
+        extra = sorted(set(data) - set(flat_like))[:4]
+        raise CheckpointCorruptError(
+            f"checkpoint leaf set at {path} does not match the restore "
+            f"target: missing {missing}, unexpected {extra}")
+    mleaves = manifest.get("leaves", {})
+    if set(mleaves) != set(data):
+        raise CheckpointCorruptError(
+            f"manifest/arrays leaf sets disagree at {path} (torn commit)")
     leaves = []
     for key, leaf in flat_like.items():
         arr = data[key]
-        assert tuple(arr.shape) == tuple(np.shape(leaf)), \
-            f"shape mismatch for {key}"
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise CheckpointCorruptError(
+                f"shape mismatch for {key} at {path}: saved "
+                f"{tuple(arr.shape)}, restore target "
+                f"{tuple(np.shape(leaf))}")
+        ml = mleaves[key]
+        if (list(arr.shape) != list(ml["shape"])
+                or str(arr.dtype) != ml["dtype"]):
+            raise CheckpointCorruptError(
+                f"manifest disagrees with arrays for {key} at {path}")
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
@@ -66,3 +138,44 @@ def load_checkpoint(path: str, like: PyTree,
 def checkpoint_step(path: str) -> int:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+# ---------------------------------------------------------------------------
+# periodic run state: per-step dirs + atomic LATEST pointer
+# ---------------------------------------------------------------------------
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save_run_state(root: str, tree: PyTree, step: int) -> str:
+    """One periodic checkpoint: ``root/step_XXXXXXXX/`` committed first,
+    then the ``LATEST`` pointer renamed in -- so a crash anywhere leaves
+    ``LATEST`` naming a COMPLETE checkpoint (possibly the previous one,
+    never a torn one)."""
+    os.makedirs(root, exist_ok=True)
+    d = _step_dir(root, step)
+    save_checkpoint(d, tree, step=step)
+    _commit_bytes(os.path.join(root, "LATEST"),
+                  lambda f: f.write(f"{step}\n".encode()))
+    return d
+
+
+def latest_step(root: str) -> Optional[int]:
+    p = os.path.join(root, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def load_run_state(root: str, like: PyTree,
+                   shardings: Optional[PyTree] = None
+                   ) -> Tuple[PyTree, int]:
+    """Resume from the newest committed checkpoint under ``root``."""
+    step = latest_step(root)
+    if step is None:
+        raise CheckpointCorruptError(f"no LATEST pointer under {root}")
+    tree = load_checkpoint(_step_dir(root, step), like, shardings,
+                           expect_step=step)
+    return tree, step

@@ -108,12 +108,13 @@ def _runner_setup(P_=4, B=16, epochs=3, n_hot=64, uneven=False):
     return g, pg, schedules, dv, mesh
 
 
-def _make_runner(cls, g, schedules, dv, mesh, B):
+def _make_runner(cls, g, schedules, dv, mesh, B, **kw):
     from repro.models import GNNConfig
     from repro.train import AdamW
     cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=32,
                     num_classes=g.num_classes, num_layers=2)
-    return cls(schedules, dv, cfg, AdamW(lr=3e-3), mesh, B, g.labels)
+    return cls(schedules, dv, cfg, AdamW(lr=3e-3), mesh, B, g.labels,
+               **kw)
 
 
 def check_device_runner():
@@ -347,6 +348,150 @@ def check_overlapped_staging():
     print("overlapped_staging OK")
 
 
+def check_fault_recovery():
+    """Device staging fault sites (DESIGN.md §10): every tolerated fault
+    recovers to a BIT-equal loss curve, persistent faults surface the
+    typed ``StagingError``, and a lost staged cache degrades exactly one
+    epoch to uncached without touching any other epoch's accounting."""
+    from repro.dist import DeviceRapidGNNRunner
+    from repro.dist.runner import StagingError
+    from repro.fault import active_plan, plan_from_profile
+
+    B, epochs = 16, 3
+    g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs)
+    clean = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    rep_clean = clean.run()
+    oracle = np.concatenate([r.losses for r in rep_clean])
+
+    # stage-flaky: transient background-staging death -> one supervised
+    # eager rebuild, zero degradation, bit-equal curve, ONE compilation
+    r = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    plan = plan_from_profile("stage-flaky", seed=3)
+    with active_plan(plan):
+        rep = r.run()
+    assert plan.total_fires() >= 1, "stage-flaky plan never fired"
+    assert r.stage_retries >= 1
+    assert r.trace_count == 1
+    assert sum(x.degraded for x in rep) == 0
+    np.testing.assert_array_equal(
+        np.concatenate([x.losses for x in rep]), oracle,
+        err_msg="transient staging fault broke loss bit-equality")
+
+    # stage-dead: staging fails on EVERY attempt -> typed StagingError
+    # after the bounded retry budget, never a hang or raw thread error
+    r = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    try:
+        with active_plan(plan_from_profile("stage-dead", seed=3)):
+            r.run()
+    except StagingError:
+        pass
+    else:
+        raise AssertionError(
+            "persistent staging failure must raise StagingError")
+
+    # stage-deadline: staging thread hangs past the deadline -> overrun
+    # counted, eager rebuild on the critical path, still bit-equal
+    r = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B,
+                     stage_deadline_s=0.05)
+    plan = plan_from_profile("stage-deadline", seed=3)
+    with active_plan(plan):
+        rep = r.run()
+    assert plan.fires("stage", "hang") >= 1
+    assert r.deadline_overruns >= 1
+    assert r.trace_count == 1
+    np.testing.assert_array_equal(
+        np.concatenate([x.losses for x in rep]), oracle,
+        err_msg="deadline-overrun recovery broke loss bit-equality")
+
+    # cache-loss: epoch 1's staged C_s dropped -> that epoch recollates
+    # UNCACHED (graceful degrade, counted in the report); features come
+    # from the same table either way so the curve stays bit-equal, and
+    # the wider-k recollation may cost at most one extra trace
+    r = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    plan = plan_from_profile("cache-loss", seed=3)
+    with active_plan(plan):
+        rep = r.run()
+    assert plan.fires("stage_cache", "drop") == 1
+    assert r.degraded_epochs == 1
+    assert rep[1].degraded == 1 and rep[1].degrade_reason == "cache_lost"
+    assert sum(x.degraded for x in rep) == 1
+    assert 1 <= r.trace_count <= 2
+    # uncached epoch pulls strictly more lanes; others match clean
+    assert rep[1].total_miss_lanes > rep_clean[1].total_miss_lanes
+    for e in (0, 2):
+        np.testing.assert_array_equal(rep[e].miss_lanes,
+                                      rep_clean[e].miss_lanes)
+    np.testing.assert_array_equal(
+        np.concatenate([x.losses for x in rep]), oracle,
+        err_msg="uncached degraded epoch broke loss bit-equality")
+    print("fault_recovery OK")
+
+
+def check_crash_resume():
+    """Kill-and-resume bit parity: periodic atomic run-state checkpoints
+    + an injected crash at an epoch boundary; resuming from LATEST must
+    reproduce the uninterrupted curve bit-for-bit. Also drills a crash
+    INSIDE the checkpoint commit: LATEST must keep naming the previous
+    complete step."""
+    import tempfile
+
+    from repro.dist import DeviceRapidGNNRunner
+    from repro.fault import InjectedCrash, active_plan, plan_from_profile
+    from repro.models.gnn import init_params
+    from repro.train import latest_step, load_run_state
+
+    B, epochs = 16, 3
+    g, pg, schedules, dv, mesh = _runner_setup(B=B, epochs=epochs)
+    full = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+    rep_full = full.run()
+    uninterrupted = np.concatenate([r.losses for r in rep_full])
+
+    with tempfile.TemporaryDirectory() as td:
+        r1 = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B,
+                          checkpoint_dir=td, checkpoint_every=1)
+        try:
+            with active_plan(plan_from_profile("run-crash", seed=5)):
+                r1.run()
+        except InjectedCrash:
+            pass
+        else:
+            raise AssertionError("run-crash plan must kill the run")
+        step = latest_step(td)
+        assert step == 2, f"expected LATEST=2 after epoch-2 crash, {step}"
+
+        r2 = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B)
+        like_p = init_params(r2.cfg, jax.random.key(r2.seed))
+        like = {"params": like_p, "opt": r2.opt.init(like_p)}
+        state, step = load_run_state(td, like)
+        rep_tail = r2.run(params=state["params"],
+                          opt_state=state["opt"], start_epoch=step)
+        assert len(rep_tail) == epochs - step
+        resumed = np.concatenate([r.losses for r in rep_tail])
+        np.testing.assert_array_equal(
+            resumed,
+            np.concatenate([r.losses for r in rep_full[step:]]),
+            err_msg="crash-resumed loss curve diverges bit-wise")
+
+    # crash BETWEEN the arrays commit and the manifest commit of step 2:
+    # LATEST stays on step 1, which must restore bit-intact
+    with tempfile.TemporaryDirectory() as td:
+        r3 = _make_runner(DeviceRapidGNNRunner, g, schedules, dv, mesh, B,
+                          checkpoint_dir=td, checkpoint_every=1)
+        try:
+            with active_plan(plan_from_profile("ckpt-crash", seed=5)):
+                r3.run()
+        except InjectedCrash:
+            pass
+        else:
+            raise AssertionError("ckpt-crash plan must kill the commit")
+        assert latest_step(td) == 1
+        like_p = init_params(r3.cfg, jax.random.key(r3.seed))
+        like = {"params": like_p, "opt": r3.opt.init(like_p)}
+        state, step = load_run_state(td, like)
+        assert step == 1
+    print("crash_resume OK")
+
+
 def check_moe_expert_parallel():
     from repro.dist import make_mesh
     from repro.models.transformer.common import ArchConfig
@@ -393,6 +538,8 @@ if __name__ == "__main__":
               "determinism": check_determinism,
               "checkpoint": check_checkpoint_resume,
               "overlap": check_overlapped_staging,
+              "fault": check_fault_recovery,
+              "crashresume": check_crash_resume,
               "moe": check_moe_expert_parallel,
               "decode": check_sharded_decode_attention}
     if which == "all":

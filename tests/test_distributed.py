@@ -63,6 +63,22 @@ def test_overlapped_staging_bit_consistent():
     assert "overlapped_staging OK" in _run("overlap")
 
 
+def test_fault_recovery_through_device_runner():
+    """Injected staging faults: transient death retried bit-exactly,
+    persistent death surfaces StagingError, deadline overrun rebuilt on
+    the critical path, lost staged cache degrades ONE epoch to uncached
+    -- loss curves bit-equal to the clean run throughout."""
+    assert "fault_recovery OK" in _run("fault")
+
+
+def test_crash_resume_bit_parity():
+    """Injected crash at an epoch boundary + periodic atomic run-state
+    checkpoints: resume from LATEST reproduces the uninterrupted loss
+    curve bit-for-bit; crash inside the checkpoint commit leaves LATEST
+    on the previous complete step."""
+    assert "crash_resume OK" in _run("crashresume")
+
+
 def test_moe_expert_parallel_matches_single_device():
     assert "moe_expert_parallel OK" in _run("moe")
 

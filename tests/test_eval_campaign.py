@@ -15,9 +15,11 @@ import numpy as np
 import pytest
 
 from _hyp import ALL_HEALTH_CHECKS, given, settings, st
-from repro.eval import (CellResult, CellSpec, check_backend_pair,
-                        all_pass, failures, tiny_host_grid,
-                        validate_report, verify_cells)
+from repro.eval import (CellResult, CellSpec, build_fault_report,
+                        check_backend_pair, all_pass, failures,
+                        fault_grid, tiny_host_grid,
+                        validate_fault_report, validate_report,
+                        verify_cells, verify_fault_pairs)
 from repro.eval.campaign import run_campaign
 from repro.eval.cells import run_host_cell
 
@@ -39,8 +41,13 @@ def test_report_schema_valid(tiny_report):
     report, loaded = tiny_report
     assert validate_report(report) == []
     assert validate_report(loaded) == []        # survives JSON round trip
-    assert loaded["schema"] == "rapidgnn.bench_paper/v1"
+    assert loaded["schema"] == "rapidgnn.bench_paper/v2"
     assert loaded["num_cells"] == 2
+    # v2: every cell carries the fault/degradation counters (zero when
+    # the campaign runs clean)
+    for cell in loaded["cells"]:
+        assert cell["fault_events"] == 0
+        assert cell["degraded_epochs"] == 0
 
 
 def test_all_differential_checks_pass(tiny_report):
@@ -219,6 +226,90 @@ def test_host_end_to_end_determinism(seed):
         np.testing.assert_array_equal(ca, cb)
     for k in ("send_ids", "send_pos", "send_mask", "input_nodes"):
         np.testing.assert_array_equal(plan_a[k], plan_b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# fault campaign (host-only fast lane; the full grid incl. device cells
+# runs via `python -m repro.eval.campaign --fault` in CI)
+# ---------------------------------------------------------------------------
+
+def _fault_spec(profile):
+    return CellSpec(backend="host", system="rapidgnn", dataset="tiny",
+                    batch_size=16, workers=2, n_hot=64, epochs=2,
+                    seed=42, fanouts=(5, 5), partition="greedy",
+                    all_workers=False, net_enabled=False,
+                    fault_profile=profile,
+                    fault_seed=0 if profile == "none" else 7)
+
+
+@pytest.fixture(scope="module")
+def fault_cells():
+    return [run_host_cell(_fault_spec(p))
+            for p in ("none", "csec-loss", "pull-flaky")]
+
+
+def test_fault_grid_well_formed():
+    spec = fault_grid()
+    profiles = {c.fault_profile for c in spec.cells}
+    assert "none" in profiles and "cache-loss" in profiles
+    # faulted cells are their own scenario: they never silently pair
+    # with clean cells in the standard differential layers
+    keys = [c.scenario_key() for c in spec.cells]
+    assert len(set(keys)) == len(keys) - 1      # host+device "none" pair
+    with pytest.raises(ValueError):
+        _fault_spec("no-such-profile")
+
+
+def test_fault_cells_fire_and_recover_bit_exact(fault_cells):
+    clean, csec, pull = fault_cells
+    assert clean.fault_events == 0 and clean.degraded_epochs == 0
+    # every injection fired ...
+    assert csec.fault_events > 0 and pull.fault_events > 0
+    # ... forced the intended recovery path ...
+    assert csec.csec_degraded >= 1 and csec.degraded_epochs >= 1
+    assert pull.pull_retries >= 1 and pull.degraded_epochs == 0
+    # ... and recovery is LOSSLESS: bit-equal loss curves vs clean
+    for faulted in (csec, pull):
+        assert faulted.losses == clean.losses
+
+
+def test_verify_fault_pairs_has_teeth(fault_cells):
+    checks = verify_fault_pairs(fault_cells)
+    assert {c.check for c in checks} >= {"fault_fired",
+                                         "fault_loss_parity"}
+    assert all_pass(checks), failures(checks)
+    # a diverged recovered curve must be caught
+    bad = [CellResult.from_dict(copy.deepcopy(c.to_dict()))
+           for c in fault_cells]
+    bad[1].losses[0] += 0.25
+    got = failures(verify_fault_pairs(bad))
+    assert any(c.check == "fault_loss_parity" for c in got)
+    # a plan that never fired must be caught too
+    quiet = [CellResult.from_dict(copy.deepcopy(c.to_dict()))
+             for c in fault_cells]
+    quiet[2].fault_events = 0
+    got = failures(verify_fault_pairs(quiet))
+    assert any(c.check == "fault_fired" for c in got)
+
+
+def test_fault_report_schema_round_trip(fault_cells, tmp_path):
+    from repro.eval import write_report
+
+    checks = verify_cells(fault_cells) + verify_fault_pairs(fault_cells)
+    report = build_fault_report("fault", fault_cells, checks)
+    assert validate_fault_report(report) == []
+    assert report["all_checks_pass"], failures(checks)
+    out = str(tmp_path / "BENCH_fault.json")
+    write_report(report, out)
+    with open(out) as f:
+        loaded = json.load(f)
+    assert validate_fault_report(loaded) == []
+    # the acceptance criterion: >= 1 degraded-epoch cell in the artifact
+    assert any(r["degraded_epochs"] > 0 for r in loaded["fault_summary"])
+    # validator teeth: a campaign where nothing degrades is invalid
+    for r in loaded["fault_summary"]:
+        r["degraded_epochs"] = 0
+    assert any("degraded" in p for p in validate_fault_report(loaded))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,404 @@
+"""Fault-injection plane (DESIGN.md §10): plan determinism, probe
+semantics, per-site fire + bit-exact recovery on the host runtime,
+spill heal, checkpoint atomicity, and the seeded chaos property
+(every random plan either recovers bit-exactly or raises typed)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+from _hyp import ALL_HEALTH_CHECKS, given, settings, st
+
+from repro.fault import (FaultPlan, FaultRule, FatalFault, InjectedCrash,
+                         InjectedFault, TransientFault, active_plan,
+                         current, fault_point, plan_from_profile,
+                         random_plan, retry_call)
+from repro.fault.plan import PROFILES
+
+
+# ---- plan determinism / rule gating --------------------------------------
+
+def test_decide_is_order_independent():
+    """The Bernoulli draw is a pure function of (site, kind, rule,
+    attempt, ctx) -- two plans with the same seed agree on every context
+    no matter which order the contexts are probed in."""
+    rules = (FaultRule("pull", "error", p=0.5, max_attempt=3),)
+    ctxs = [(a, e, w, i) for a in range(2) for e in range(3)
+            for w in range(2) for i in range(3)]
+    fwd = FaultPlan(11, rules)
+    rev = FaultPlan(11, rules)
+    got_f = [fwd.decide("pull", *c) is not None for c in ctxs]
+    got_r = [rev.decide("pull", *c) is not None for c in reversed(ctxs)]
+    assert got_f == got_r[::-1]
+    assert fwd.snapshot() == rev.snapshot()
+    # and it is not degenerate: a p=0.5 rule both fires and skips
+    assert 0 < sum(got_f) < len(got_f)
+    # a different seed gives a different schedule
+    other = FaultPlan(12, rules)
+    got_o = [other.decide("pull", *c) is not None for c in ctxs]
+    assert got_o != got_f
+
+
+def test_rule_context_gating():
+    plan = FaultPlan(0, (FaultRule("prefetch", "error", epochs=(1,),
+                                   workers=(0,), indices=(2,),
+                                   max_attempt=1),))
+    hit = dict(attempt=0, epoch=1, worker=0, index=2)
+    assert plan.decide("prefetch", **hit) is not None
+    assert plan.decide("pull", **hit) is None              # wrong site
+    assert plan.decide("prefetch", 0, 0, 0, 2) is None     # wrong epoch
+    assert plan.decide("prefetch", 0, 1, 1, 2) is None     # wrong worker
+    assert plan.decide("prefetch", 0, 1, 0, 0) is None     # wrong index
+    assert plan.decide("prefetch", 1, 1, 0, 2) is not None # attempt <= max
+    assert plan.decide("prefetch", 2, 1, 0, 2) is None     # retry cleared
+    assert plan.fires("prefetch", "error") == 2
+    assert plan.total_fires() == 2
+    assert plan.snapshot() == {"prefetch:error": 2}
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultRule("nope", "error")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultRule("pull", "nope")
+    with pytest.raises(ValueError, match="outside"):
+        FaultRule("pull", "error", p=1.5)
+    with pytest.raises(ValueError, match="unknown fault profile"):
+        plan_from_profile("nope")
+    for name in PROFILES:
+        plan_from_profile(name, seed=3)     # every profile constructs
+
+
+def test_random_plan_is_seed_stable():
+    a, b = random_plan(7, 2), random_plan(7, 2)
+    assert a.rules == b.rules
+    assert random_plan(7, 3).rules != a.rules or \
+        random_plan(8, 2).rules != a.rules
+
+
+# ---- fault_point / retry_call semantics ----------------------------------
+
+def test_fault_point_without_plan_is_noop():
+    assert current() is None
+    assert fault_point("pull", epoch=0) is None
+
+
+def test_fault_point_kinds():
+    def plan_for(kind, **kw):
+        return FaultPlan(0, (FaultRule("pull", kind, **kw),))
+
+    with active_plan(plan_for("error")):
+        with pytest.raises(TransientFault):
+            fault_point("pull")
+    with active_plan(plan_for("fatal")):
+        with pytest.raises(FatalFault):
+            fault_point("pull")
+    with active_plan(plan_for("crash")):
+        with pytest.raises(InjectedCrash):
+            fault_point("pull")
+    with active_plan(plan_for("hang", delay_s=0.01)):
+        assert fault_point("pull") == "hang"
+    # file kind without a path operand degrades to an advisory return
+    with active_plan(plan_for("drop")):
+        assert fault_point("pull") == "drop"
+    assert current() is None                # context manager restored
+
+
+def test_fault_point_file_damage(tmp_path):
+    payload = bytes(range(200)) * 10
+    for kind in ("corrupt", "truncate", "drop"):
+        p = tmp_path / f"{kind}.bin"
+        p.write_bytes(payload)
+        plan = FaultPlan(0, (FaultRule("spill_write", kind),))
+        with active_plan(plan):
+            assert fault_point("spill_write", path=str(p)) == kind
+        if kind == "drop":
+            assert not p.exists()
+        elif kind == "truncate":
+            assert p.stat().st_size == len(payload) // 2
+        else:
+            got = p.read_bytes()
+            assert len(got) == len(payload) and got != payload
+            assert sum(a != b for a, b in zip(got, payload)) == 1
+
+
+def test_retry_call_clears_transient_and_bounds_attempts():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise TransientFault("boom")
+        return "done"
+
+    retried = []
+    out = retry_call(flaky, retries=3, base_delay_s=0.0,
+                     on_retry=retried.append)
+    assert out == "done" and calls == [0, 1, 2] and retried == [0, 1]
+
+    with pytest.raises(TransientFault):
+        retry_call(lambda a: (_ for _ in ()).throw(TransientFault("x")),
+                   retries=2, base_delay_s=0.0)
+    with pytest.raises(FatalFault):       # non-retryable passes through
+        retry_call(lambda a: (_ for _ in ()).throw(FatalFault("x")),
+                   retries=2, base_delay_s=0.0)
+
+
+# ---- spill integrity + heal ----------------------------------------------
+
+@pytest.fixture()
+def spilled(tmp_path):
+    from repro.core import build_schedule
+    from repro.graph import KHopSampler, load_dataset, partition_graph
+
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    ws = build_schedule(sampler, pg, worker=0, s0=7, num_epochs=2,
+                        n_hot=64, spill_dir=str(tmp_path))
+    return ws
+
+
+def _damage(path, how):
+    if how == "drop":
+        os.remove(path)
+    elif how == "truncate":
+        os.truncate(path, os.path.getsize(path) // 2)
+    else:
+        with open(path, "r+b") as f:
+            f.seek(os.path.getsize(path) // 2)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([b[0] ^ 0xFF]))
+
+
+@pytest.mark.parametrize("how", ["corrupt", "truncate", "drop"])
+def test_spill_damage_heals_bit_identically(spilled, tmp_path, how):
+    from repro.core.schedule import SpillCorruptError, load_epoch_npz, \
+        spill_path
+
+    ws = spilled
+    ref = ws.epoch(1)                       # clean read first
+    path = spill_path(str(tmp_path), 0, 1)
+    _damage(path, how)
+    if how != "drop":                       # direct load surfaces typed
+        with pytest.raises(SpillCorruptError) as ei:
+            load_epoch_npz(path)
+        assert ei.value.path == path
+    healed = ws.epoch(1)                    # heal: rebuild + re-spill
+    assert ws.spill_rebuilds == 1
+    np.testing.assert_array_equal(healed.cache_ids, ref.cache_ids)
+    np.testing.assert_array_equal(healed.flat.seeds, ref.flat.seeds)
+    np.testing.assert_array_equal(healed.flat.input_nodes,
+                                  ref.flat.input_nodes)
+    again = load_epoch_npz(path)            # re-spilled file loads clean
+    np.testing.assert_array_equal(again.flat.seeds, ref.flat.seeds)
+    assert ws.spill_rebuilds == 1
+
+
+def test_spill_stale_crc_detected(spilled, tmp_path):
+    """An array whose companion crc was not updated (torn in-place
+    rewrite) must fail integrity, not load silently."""
+    from repro.core.schedule import SpillCorruptError, load_epoch_npz, \
+        spill_path
+
+    path = spill_path(str(tmp_path), 0, 0)
+    spilled.epoch(0)
+    with np.load(path) as z:
+        arrs = {k: z[k] for k in z.files}
+    arrs["seeds"] = arrs["seeds"].copy()
+    arrs["seeds"][0] += 1                   # payload edited, crc stale
+    np.savez(path, **arrs)
+    with pytest.raises(SpillCorruptError, match="seeds"):
+        load_epoch_npz(path)
+
+
+def test_spill_corruption_without_builder_raises(spilled, tmp_path):
+    from repro.core.schedule import SpillCorruptError, spill_path
+
+    ws = dataclasses.replace(spilled, builder=None)
+    _damage(spill_path(str(tmp_path), 0, 0), "truncate")
+    with pytest.raises(SpillCorruptError):
+        ws.epoch(0)
+
+
+# ---- checkpoint atomicity ------------------------------------------------
+
+def _tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.linspace(-1, 1, 4).astype(np.float32)}
+
+
+def test_checkpoint_round_trip_and_typed_corruption(tmp_path):
+    from repro.train import (CheckpointCorruptError, checkpoint_step,
+                             load_checkpoint, save_checkpoint)
+
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    save_checkpoint(d, tree, step=5)
+    assert checkpoint_step(d) == 5
+    like = {k: np.zeros_like(v) for k, v in tree.items()}
+    out = load_checkpoint(d, like, expect_step=5)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
+
+    with pytest.raises(CheckpointCorruptError, match="step mismatch"):
+        load_checkpoint(d, like, expect_step=6)
+    with pytest.raises(CheckpointCorruptError, match="leaf set"):
+        load_checkpoint(d, {**like, "extra": np.zeros(2)})
+    with pytest.raises(CheckpointCorruptError, match="shape mismatch"):
+        load_checkpoint(d, {"w": np.zeros((2, 2), np.float32),
+                            "b": like["b"]})
+    os.truncate(os.path.join(d, "arrays.npz"),
+                os.path.getsize(os.path.join(d, "arrays.npz")) // 2)
+    with pytest.raises(CheckpointCorruptError, match="torn"):
+        load_checkpoint(d, like)
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        load_checkpoint(str(tmp_path / "nowhere"), like)
+
+
+def test_run_state_latest_pointer_and_crash_atomicity(tmp_path):
+    from repro.train import (latest_step, load_run_state, save_run_state)
+
+    root = str(tmp_path)
+    assert latest_step(root) is None
+    tree = _tree()
+    save_run_state(root, tree, step=1)
+    save_run_state(root, {k: v + 1 for k, v in tree.items()}, step=2)
+    assert latest_step(root) == 2
+    like = {k: np.zeros_like(v) for k, v in tree.items()}
+    out, step = load_run_state(root, like)
+    assert step == 2
+    np.testing.assert_array_equal(out["w"], tree["w"] + 1)
+
+    # crash INSIDE the step-3 commit (between arrays and manifest):
+    # LATEST must keep naming step 2, which must restore bit-intact
+    with pytest.raises(InjectedCrash):
+        with active_plan(FaultPlan(
+                0, (FaultRule("checkpoint", "crash", epochs=(3,)),))):
+            save_run_state(root, tree, step=3)
+    assert latest_step(root) == 2
+    out, step = load_run_state(root, like)
+    assert step == 2
+    np.testing.assert_array_equal(out["w"], tree["w"] + 1)
+
+
+def test_chaos_checkpoint_drill_passes():
+    from repro.fault.chaos import _checkpoint_drill
+
+    msgs = []
+    assert _checkpoint_drill(msgs.append)
+    assert msgs == []
+
+
+# ---- prefetch supervision surfaces typed + names the thread --------------
+
+def test_prefetch_hang_stall_and_join_name():
+    from repro.core import NetworkModel, ShardedFeatureStore, \
+        build_schedule
+    from repro.core.cache import DoubleBufferCache
+    from repro.core.metrics import EpochMetrics
+    from repro.core.prefetch import PrefetchStall, Prefetcher
+    from repro.core.schedule import epoch_edge_maxima
+    from repro.graph import KHopSampler, load_dataset, partition_graph
+
+    g = load_dataset("tiny")
+    pg = partition_graph(g, 2, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=32)
+    ws = build_schedule(sampler, pg, worker=0, s0=7, num_epochs=1,
+                        n_hot=64)
+    es = ws.epoch(0)
+    store = ShardedFeatureStore(pg, worker=0,
+                                net=NetworkModel(enabled=False))
+    plan = FaultPlan(0, (FaultRule("prefetch", "hang", indices=(0,),
+                                   delay_s=0.6),))
+    pf = Prefetcher(es, store, DoubleBufferCache(store.d),
+                    g.labels, 32, es.m_max, epoch_edge_maxima(es),
+                    Q=2, metrics=EpochMetrics(epoch=0))
+    with active_plan(plan):
+        pf.start()
+        try:
+            with pytest.raises(PrefetchStall, match="prefetch-w0-e0"):
+                pf.get(timeout=0.05)        # producer asleep -> stall
+            with pytest.raises(TimeoutError, match="prefetch-w0-e0"):
+                pf.join(timeout=0.05)       # bounded join names it too
+        finally:
+            pf.close(timeout=5.0)           # thread wakes and exits
+
+
+# ---- host runtime: per-profile fire + bit-exact recovery -----------------
+
+_CH = None
+_ORACLE = None
+
+
+def _chaos():
+    """Module-lazy shared scenario (jit compile once); fresh spill dir
+    per run, so file damage never leaks across tests."""
+    global _CH, _ORACLE
+    if _CH is None:
+        from repro.fault.chaos import _Chaos
+        _CH = _Chaos()
+        _ORACLE = _CH.run(None)
+    return _CH, _ORACLE
+
+
+@pytest.mark.parametrize("profile", ["pull-flaky", "prefetch-flaky",
+                                     "csec-loss", "spill-rot",
+                                     "spill-trunc", "spill-gone"])
+def test_host_profile_fires_and_recovers_bit_exact(profile):
+    ch, oracle = _chaos()
+    plan = plan_from_profile(profile, seed=4)
+    losses = ch.run(plan)
+    assert plan.total_fires() >= 1, f"{profile} never fired"
+    np.testing.assert_array_equal(
+        losses, oracle,
+        err_msg=f"{profile} recovery broke loss bit-equality")
+
+
+def test_host_prefetch_stall_falls_back_bit_exact():
+    """A producer hang past the stall deadline: the trainer rebuilds the
+    batch on the critical path -- counted, and still bit-equal."""
+    ch, oracle = _chaos()
+    plan = plan_from_profile("prefetch-hang", seed=4)
+    losses = ch.run(plan, stall_timeout_s=0.05)
+    assert plan.fires("prefetch", "hang") >= 1
+    np.testing.assert_array_equal(losses, oracle)
+
+
+def test_host_persistent_faults_surface_typed():
+    from repro.core.prefetch import PrefetchWorkerError
+
+    ch, _ = _chaos()
+    # pull-dead exhausts sync_pull's retry budget INSIDE the prefetch
+    # thread, whose own supervision wraps it typed; the injected fault
+    # rides the cause chain
+    with pytest.raises(PrefetchWorkerError) as ei:
+        ch.run(plan_from_profile("pull-dead", seed=4))
+    cause = ei.value.__cause__
+    while cause is not None and not isinstance(cause, InjectedFault):
+        cause = cause.__cause__
+    assert isinstance(cause, InjectedFault)
+    with pytest.raises(PrefetchWorkerError):
+        ch.run(plan_from_profile("prefetch-fatal", seed=4))
+
+
+# ---- chaos property: any seeded plan is bit-equal-or-typed ---------------
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(st.integers(min_value=0, max_value=2**16),
+       st.integers(min_value=0, max_value=7))
+def test_random_plans_recover_bit_exact_or_raise_typed(seed, i):
+    from repro.fault.chaos import _allowed_errors
+
+    ch, oracle = _chaos()
+    plan = random_plan(seed, i)
+    try:
+        losses = ch.run(plan)
+    except _allowed_errors():
+        return                              # typed surface is a pass
+    assert losses.shape == oracle.shape
+    np.testing.assert_array_equal(
+        losses, oracle,
+        err_msg=f"plan {plan.name} (seed={seed}) silently diverged")
