@@ -12,7 +12,8 @@ they cross-check (DESIGN.md §7):
     masks: the payload (true residual-miss rows) must MATCH the host
     sim's remote_bytes exactly, while the wire column adds the padded
     all_to_all lanes (P * k_max rows/step) the static-shape collective
-    actually moves.
+    actually moves and the request column the id-lane leg shipped the
+    other way (previously unaccounted).
 
 The same contract runs on the REAL device runners (not a replay) inside
 ``python -m repro.eval.campaign`` as the ``miss_parity`` /
@@ -28,14 +29,15 @@ def run(datasets=("ogbn_products_sim", "reddit_sim"),
         batch_sizes=(100, 200), epochs=2, workers=4, n_hot=32768):
     rows = ["dataset,batch,rapidgnn_MB_per_step,dglmetis_MB_per_step,"
             "reduction_x,device_payload_MB_per_step,"
-            "device_wire_MB_per_step,host_vs_device_payload"]
+            "device_wire_MB_per_step,device_request_MB_per_step,"
+            "host_vs_device_payload"]
     for ds in datasets:
         for b in batch_sizes:
             r = run_gnn_system("rapidgnn", ds, b, workers=workers,
                                epochs=epochs, n_hot=n_hot, train=False)
             m = run_gnn_system("dgl-metis", ds, b, workers=workers,
                                epochs=epochs, train=False)
-            payload, wire, cache, steps = replay_device_bytes(
+            payload, wire, request, cache, steps = replay_device_bytes(
                 ds, b, workers, epochs, n_hot)
             # ONE denominator for every per-step column: all steps of all
             # epochs (GNNResult.bytes_per_step drops epoch 0's steps but
@@ -45,11 +47,12 @@ def run(datasets=("ogbn_products_sim", "reddit_sim"),
             mmb = (m.remote_bytes + m.vector_pull_bytes) / n / 1e6
             dp = payload / n / 1e6
             dw = wire / n / 1e6
+            dq = request / n / 1e6
             match = ("MATCH" if payload == r.remote_bytes
                      else f"DIFF({payload}vs{r.remote_bytes})")
             rows.append(f"{ds},{b},{rmb:.2f},{mmb:.2f},"
                         f"{mmb / max(rmb, 1e-9):.2f},{dp:.2f},{dw:.2f},"
-                        f"{match}")
+                        f"{dq:.2f},{match}")
     return rows
 
 

@@ -66,7 +66,7 @@ def main() -> None:
     from benchmarks import (speedup, access_dist, comm_volume, cache_sweep,
                             scaling, memory, energy, convergence,
                             embedding_cache, device_epoch, assemble,
-                            schedule_build)
+                            schedule_build, topology)
 
     if args.full:
         ds = ("reddit_sim", "ogbn_products_sim", "ogbn_papers_sim")
@@ -89,6 +89,12 @@ def main() -> None:
              lambda rows: rows[-1] if rows else "-")
     _section("fig5_cache_sweep",
              lambda: cache_sweep.run(batch_sizes=bs[:1]),
+             lambda rows: rows[-1] if rows else "-")
+    # raises (-> section FAILED) on a broken intra+inter byte-sum
+    # identity or a DCN bias that raises cross-host traffic
+    _section("topology",
+             lambda: topology.run(datasets=ds, batch_sizes=bs[:1],
+                                  epochs=epochs),
              lambda rows: rows[-1] if rows else "-")
     _section("fig6_scaling", scaling.run,
              lambda rows: rows[-1] if rows else "-")

@@ -1,0 +1,59 @@
+"""Fig-4-style intra-vs-inter-host traffic cut on the hierarchical
+topology (DESIGN.md §6.7).
+
+Replays every worker's deterministic schedule under a ``hosts x
+devices_per_host`` topology and splits the residual-miss payload by
+tier: same-host misses ride the cheap intra-host (ICI) wire, cross-host
+misses the slow DCN. Two identities gate the section (raise -> section
+FAILED -> CI bench grep fails):
+
+  * byte-sum   -- intra + inter bytes == the flat-mesh payload counted
+    independently through ``build_pull_plan`` (the same identity the
+    campaign's ``topology_byte_sum`` differential check pins against
+    REAL device cells);
+  * bias       -- the DCN-biased hot set (``select_hot_set`` weighted
+    toward cross-host owners, ``Topology.owner_bias``) must not RAISE
+    inter-host bytes; the table reports how much it removes.
+"""
+from __future__ import annotations
+
+from repro.eval.replay import replay_topology_bytes
+
+
+def run(datasets=("ogbn_products_sim",), batch_sizes=(100,), epochs=2,
+        workers=4, hosts=2, n_hot=32768, dcn_bias=4.0):
+    rows = ["dataset,batch,topology,intra_MB,inter_MB,flat_MB,"
+            "byte_sum_identity,biased_inter_MB,inter_reduction_x"]
+    bad = []
+    for ds in datasets:
+        for b in batch_sizes:
+            t = replay_topology_bytes(ds, b, workers, epochs, n_hot,
+                                      hosts, dcn_bias=dcn_bias)
+            tier_sum = t["intra_bytes"] + t["inter_bytes"]
+            ident = ("MATCH" if tier_sum == t["flat_bytes"]
+                     else f"DIFF({tier_sum}vs{t['flat_bytes']})")
+            if ident != "MATCH":
+                bad.append(f"{ds}/b{b}:{ident}")
+            if t["biased_inter_bytes"] > t["inter_bytes"]:
+                bad.append(f"{ds}/b{b}:bias_raised_inter("
+                           f"{t['biased_inter_bytes']}vs"
+                           f"{t['inter_bytes']})")
+            red = t["inter_bytes"] / max(t["biased_inter_bytes"], 1)
+            rows.append(
+                f"{ds},{b},{t['hosts']}x{t['devices_per_host']},"
+                f"{t['intra_bytes'] / 1e6:.2f},"
+                f"{t['inter_bytes'] / 1e6:.2f},"
+                f"{t['flat_bytes'] / 1e6:.2f},{ident},"
+                f"{t['biased_inter_bytes'] / 1e6:.2f},{red:.2f}")
+    if bad:
+        raise RuntimeError("topology identity FAILED: " + ";".join(bad))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -70,9 +70,12 @@ class ShardedFeatureStore:
         remote = self._remote_mask(ids)
         n_remote = int(remote.sum())
         nbytes = n_remote * self.d * self.itemsize
-        # one RPC per remote partition touched (DistDGL KV-store fan-out)
+        # one RPC per remote partition touched (DistDGL KV-store
+        # fan-out); a fully-LOCAL batch touches no partition, so it
+        # charges zero RPCs and zero modelled time (the historical
+        # ``max(len(owners), 1)`` floor modelled a phantom RPC there)
         owners = np.unique(self.pg.owner[ids[remote]]) if n_remote else []
-        n_rpc = max(len(owners), 1)
+        n_rpc = len(owners)
         m.rpc_count += n_remote          # paper's rpc_e += |M_i|
         m.sync_pull_calls += 1
         m.remote_bytes += nbytes

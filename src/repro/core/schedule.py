@@ -348,7 +348,8 @@ def merge_pad_bounds(
 
 
 def select_hot_set(remote_ids: np.ndarray, remote_freq: np.ndarray,
-                   n_hot: int) -> np.ndarray:
+                   n_hot: int,
+                   weight: Optional[np.ndarray] = None) -> np.ndarray:
     """Top-``n_hot`` remote ids by (freq desc, id asc), returned SORTED.
 
     The lexicographic tie-break is load-bearing: ``argpartition`` (the
@@ -357,17 +358,26 @@ def select_hot_set(remote_ids: np.ndarray, remote_freq: np.ndarray,
     internals is not the paper's deterministic schedule (Prop 3.1).
     ``remote_ids`` arrives ascending (``np.unique`` output), so a STABLE
     sort on descending frequency realises (-freq, id) order exactly.
+
+    ``weight`` (aligned with ``remote_ids``) multiplies the frequency
+    before ranking -- the topology-aware admission bias (DESIGN.md
+    §6.7): cross-DCN owners get ``weight > 1`` so the cache preferably
+    saves the expensive fetches. ``weight=None`` (and any all-equal
+    weight) leaves the selection bit-identical to the unbiased path.
     """
     k = min(n_hot, remote_ids.shape[0])
     if k <= 0:
         return np.zeros(0, np.int64)
-    order = np.argsort(-remote_freq, kind="stable")
+    eff = remote_freq if weight is None \
+        else remote_freq.astype(np.float64) * weight
+    order = np.argsort(-eff, kind="stable")
     return np.sort(remote_ids[order[:k]])
 
 
 def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
                  s0: int, e: int, train_nodes: np.ndarray, n_hot: int,
-                 compiler: str = "batched") -> EpochSchedule:
+                 compiler: str = "batched",
+                 owner_bias: Optional[np.ndarray] = None) -> EpochSchedule:
     if compiler == "batched":
         flat = sampler.sample_epoch_batched(s0, worker, e, train_nodes)
     elif compiler == "device":
@@ -387,20 +397,28 @@ def _build_epoch(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     # (N_i^e is a set; input_nodes are unique per batch, so one bincount
     # over the flat stream IS the per-batch indicator sum)
     remote = flat.input_nodes[pg.owner[flat.input_nodes] != worker]
-    if compiler == "device":
+    if compiler == "device" and owner_bias is None:
         from repro.graph.device_sampler import (device_remote_freq,
                                                 device_select_hot_set)
         remote_ids, remote_freq = device_remote_freq(
             remote, int(pg.graph.num_nodes))
         cache_ids = device_select_hot_set(remote_ids, remote_freq, n_hot)
     else:
+        # owner_bias (topology-aware admission, DESIGN.md §6.7) routes
+        # through the numpy selector on every compiler: the weighted
+        # ranking has no device port, and schedule determinism only
+        # needs the selection itself to be platform-independent
         if remote.size:
             remote_ids, remote_freq = np.unique(remote,
                                                 return_counts=True)
         else:
             remote_ids = np.zeros(0, np.int64)
             remote_freq = np.zeros(0, np.int64)
-        cache_ids = select_hot_set(remote_ids, remote_freq, n_hot)
+        weight = (None if owner_bias is None
+                  else np.asarray(owner_bias,
+                                  np.float64)[pg.owner[remote_ids]])
+        cache_ids = select_hot_set(remote_ids, remote_freq, n_hot,
+                                   weight=weight)
     return EpochSchedule(epoch=e, flat=flat, remote_ids=remote_ids,
                          remote_freq=remote_freq, cache_ids=cache_ids,
                          m_max=m_max)
@@ -410,7 +428,9 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
                    s0: int, num_epochs: int, n_hot: int,
                    spill_dir: Optional[str] = None,
                    compiler: str = "batched",
-                   lazy: bool = False) -> WorkerSchedule:
+                   lazy: bool = False,
+                   owner_bias: Optional[np.ndarray] = None
+                   ) -> WorkerSchedule:
     """Paper Alg. 1 lines 1-3, for one worker.
 
     ``compiler`` picks the epoch sampler: ``"batched"`` (default) is the
@@ -425,7 +445,12 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     skipped entirely (the schedule re-materializes from (s0, w, e)
     faster than an npz read-back on device). Spilled (non-lazy) builds
     write their npz files on a background ``SpillWriter`` thread, so
-    epoch ``e``'s write overlaps epoch ``e+1``'s build."""
+    epoch ``e``'s write overlaps epoch ``e+1``'s build.
+
+    ``owner_bias`` ((P,) float, e.g. ``Topology.owner_bias``) weights
+    the hot-set frequency per owning worker -- the topology-aware cache
+    admission (DESIGN.md §6.7). None keeps the unbiased paper schedule
+    bit-identical."""
     local = pg.local_nodes[worker]
     tm = pg.graph.train_mask
     train_nodes = local[tm[local]] if tm is not None else local
@@ -440,7 +465,8 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     try:
         for e in range(num_epochs):
             es = _build_epoch(sampler, pg, worker, s0, e, train_nodes,
-                              n_hot, compiler=compiler)
+                              n_hot, compiler=compiler,
+                              owner_bias=owner_bias)
             epoch_meta.append(
                 (es.m_max,
                  epoch_edge_maxima(es, num_layers=len(sampler.fanouts))))
@@ -461,7 +487,8 @@ def build_schedule(sampler: KHopSampler, pg: PartitionedGraph, worker: int,
     # rebuilds bit-identically from (s0, worker, e) -- Prop 3.1)
     def builder(e: int) -> EpochSchedule:
         return _build_epoch(sampler, pg, worker, s0, e, train_nodes,
-                            n_hot, compiler=compiler)
+                            n_hot, compiler=compiler,
+                            owner_bias=owner_bias)
     return WorkerSchedule(worker=worker, s0=s0, n_hot=n_hot, epochs=epochs,
                           spill_dir=spill_dir, epoch_meta=epoch_meta,
                           builder=builder)

@@ -1,20 +1,27 @@
 """Device-distributed RapidGNN subsystem (DESIGN.md §6).
 
-SPMD realisation of the paper's data path over a ``("data",)`` mesh:
-partition-sharded feature table, offline-built pull plans, all_to_all
-cache-first feature exchange, and the scan-pipelined epoch that overlaps
-step i+1's pull with step i's training. Host-emulated devices run the
-same code as TPU pods (tests pin ``--xla_force_host_platform_device_count``).
+SPMD realisation of the paper's data path over a flat ``("data",)`` or
+hierarchical ``("dcn", "data")`` mesh (``Topology``, DESIGN.md §6.7):
+partition-sharded feature table, offline-built pull plans (two-tier on
+hierarchical meshes: cheap intra-host lanes + a separate cross-host DCN
+exchange), all_to_all cache-first feature exchange, and the
+scan-pipelined epoch that overlaps step i+1's pull with step i's
+training. Host-emulated devices run the same code as TPU pods (tests
+pin ``--xla_force_host_platform_device_count``).
 
 Importing this package never touches jax device state -- meshes are built
 by ``make_mesh`` on demand, so launchers can set XLA_FLAGS first.
 """
 from repro.dist.mesh import make_mesh, dp_axes
+from repro.dist.topology import Topology
 from repro.dist.feature_a2a import (PullPlan, build_pull_plan,
-                                    pack_pull_lanes, pull_shard,
+                                    pack_pull_lanes,
+                                    pack_pull_lanes_two_tier, pull_shard,
+                                    pull_shard_two_tier,
                                     pull_features, cache_gather)
 from repro.dist.gnn_step import (CACHE_PAD, DeviceCache, DeviceView,
-                                 epoch_k_max, collate_device_epoch,
+                                 epoch_k_max, epoch_k_max_split,
+                                 collate_device_epoch,
                                  collate_device_epoch_loop, stack_caches,
                                  make_pipelined_epoch, make_ondemand_epoch,
                                  empty_caches, prefetch_stream)
@@ -25,10 +32,12 @@ from repro.dist.shardings import (fit_spec, param_shardings, opt_shardings,
                                   batch_shardings, decode_state_shardings)
 
 __all__ = [
-    "make_mesh", "dp_axes",
-    "PullPlan", "build_pull_plan", "pack_pull_lanes", "pull_shard",
+    "make_mesh", "dp_axes", "Topology",
+    "PullPlan", "build_pull_plan", "pack_pull_lanes",
+    "pack_pull_lanes_two_tier", "pull_shard", "pull_shard_two_tier",
     "pull_features", "cache_gather",
     "CACHE_PAD", "DeviceCache", "DeviceView", "epoch_k_max",
+    "epoch_k_max_split",
     "collate_device_epoch", "collate_device_epoch_loop", "stack_caches",
     "make_pipelined_epoch", "make_ondemand_epoch", "empty_caches",
     "prefetch_stream",

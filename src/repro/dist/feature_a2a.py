@@ -1,5 +1,6 @@
 """SPMD cache-first feature exchange: the device realisation of the
-paper's VectorPull / SyncPull over a ``("data",)`` mesh (DESIGN.md §6).
+paper's VectorPull / SyncPull over a flat ``("data",)`` or hierarchical
+``("dcn", "data")`` mesh (DESIGN.md §6; topology layer §6.7).
 
 Host-sim counterpart: ``repro.core.fetch.ShardedFeatureStore``. Here the
 "distributed KV store" is a partition-sharded feature table resident in
@@ -16,6 +17,16 @@ The request matrix is the PULL-PLAN WIRE FORMAT (DESIGN.md §6.2), built
 OFFLINE by ``build_pull_plan`` from the deterministic schedule -- this is
 what makes the exchange a static-shape collective XLA can overlap with
 compute, instead of a dynamic RPC storm.
+
+On a hierarchical mesh (``repro.dist.topology.Topology``) the plan is
+TWO-TIER: ``pack_pull_lanes_two_tier`` splits each worker's misses by
+whether the owner shares its host -- same-host lanes ride a cheap
+intra-host ``all_to_all`` over the ici ``data`` axis (owner addressed
+by LOCAL device index), cross-host lanes a separate batched exchange
+over the flattened ``("dcn", "data")`` axis pair. The union of the two
+tiers is bit-equal to the flat plan (the parity property pins it), and
+``pull_shard_two_tier`` scatter-adds both tiers' disjoint contributions
+into one buffer, bit-equal to the flat pull.
 """
 from __future__ import annotations
 
@@ -58,6 +69,13 @@ class PullPlan:
         """Feature bytes moved by the padded all_to_all return leg."""
         return int(self.send_ids.size) * row_bytes
 
+    def request_bytes(self) -> int:
+        """Id bytes moved by the padded all_to_all REQUEST leg (the
+        first collective in ``pull_shard`` ships the full (P, k_max)
+        int32 id matrix) -- previously unaccounted, so the return leg's
+        ``wire_bytes`` understated the true wire total by P*k_max*4."""
+        return int(self.send_ids.size) * int(self.send_ids.itemsize)
+
 
 def build_pull_plan(ids: np.ndarray, pos: np.ndarray, owner: np.ndarray,
                     num_parts: int, k_max: int) -> PullPlan:
@@ -83,10 +101,13 @@ def build_pull_plan(ids: np.ndarray, pos: np.ndarray, owner: np.ndarray,
         pairs = np.unique(np.stack([ids, pos], axis=1), axis=0)
         ids, pos = pairs[:, 0], pairs[:, 1]
     dest = np.asarray(owner)[ids].astype(np.int64)
+    # validate BEFORE bincount: a negative owner would crash it with an
+    # opaque "negative values" error, and the historical post-hoc
+    # ``counts.size > num_parts`` check only caught the too-HIGH side
+    if ids.size and (int(dest.min()) < 0 or int(dest.max()) >= num_parts):
+        raise ValueError(f"owner id out of range: [{dest.min()}, "
+                         f"{dest.max()}] not in [0, {num_parts})")
     counts = np.bincount(dest, minlength=num_parts).astype(np.int32)
-    if counts.size > num_parts:
-        raise ValueError(f"owner id out of range: max dest {counts.size - 1}"
-                         f" >= num_parts {num_parts}")
     if ids.size and int(counts.max()) > k_max:
         over = np.flatnonzero(counts > k_max)
         raise ValueError(
@@ -204,26 +225,107 @@ def pack_pull_lanes(ids: np.ndarray, pos: np.ndarray, group: np.ndarray,
     return send_ids, send_pos, send_mask, counts
 
 
+def pack_pull_lanes_two_tier(ids: np.ndarray, pos: np.ndarray,
+                             group: np.ndarray, owner: np.ndarray,
+                             requester: np.ndarray, num_groups: int,
+                             topo, k_max_intra: int, k_max_inter: int,
+                             assume_unique: bool = False):
+    """Topology-aware ``pack_pull_lanes``: split each request by whether
+    its owner shares the requester's host (DESIGN.md §6.7).
+
+    ``requester`` is the flat worker ordinal issuing each request,
+    aligned with ids/pos/group/owner; ``topo`` a
+    ``repro.dist.topology.Topology``. Same-host requests pack into
+    ``(num_groups, D, k_max_intra)`` lanes addressed by the owner's
+    LOCAL device index (the intra-host ``all_to_all`` over the ici axis
+    only spans D peers); cross-host requests pack into ``(num_groups,
+    P, k_max_inter)`` lanes addressed by the owner's flat ordinal (the
+    DCN-tier exchange over the flattened axis pair spans all P). Ids
+    stay GLOBAL in both tiers -- the serving side's slot arithmetic is
+    base-relative regardless of which wire the request rode.
+
+    -> (intra, inter): two ``pack_pull_lanes``-shaped 4-tuples
+    (send_ids, send_pos, send_mask, counts). Their union is bit-equal
+    to the flat-mesh ``pack_pull_lanes`` output (each lane appears in
+    exactly one tier, same per-(group, owner) ascending (id, pos)
+    order), which the two-tier parity property pins.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    pos = np.asarray(pos, dtype=np.int64)
+    group = np.asarray(group, dtype=np.int64)
+    owner = np.asarray(owner, dtype=np.int64)
+    requester = np.asarray(requester, dtype=np.int64)
+    valid = ids >= 0
+    if not valid.all():
+        ids, pos, group, owner, requester = (
+            a[valid] for a in (ids, pos, group, owner, requester))
+    P_ = topo.num_workers
+    if ids.size and (owner.min() < 0 or owner.max() >= P_):
+        raise ValueError(f"owner id out of range: [{owner.min()}, "
+                         f"{owner.max()}] not in [0, {P_})")
+    same = topo.same_host(owner, requester)
+    intra = pack_pull_lanes(
+        ids[same], pos[same], group[same], topo.local_of(owner[same]),
+        num_groups, topo.devices_per_host, k_max_intra,
+        assume_unique=assume_unique)
+    inter = pack_pull_lanes(
+        ids[~same], pos[~same], group[~same], owner[~same],
+        num_groups, P_, k_max_inter, assume_unique=assume_unique)
+    return intra, inter
+
+
 def pull_shard(table: jnp.ndarray, send_ids: jnp.ndarray,
                send_pos: jnp.ndarray, send_mask: jnp.ndarray,
-               base, m_max: int) -> jnp.ndarray:
-    """Per-device exchange body; call inside shard_map over axis ``data``.
+               base, m_max: int, axis="data") -> jnp.ndarray:
+    """Per-device exchange body; call inside shard_map over ``axis``
+    (the flat worker axis ``"data"``, or a mesh-axis tuple like
+    ``("dcn", "data")`` whose row-major flattening is the worker order).
 
-    table (n_per, d) this worker's shard; send_* (P, k) its request
-    lanes; base this worker's first global slot. -> (m_max, d) buffer
-    with requested rows scattered to ``send_pos`` (other rows zero).
-    Padding lanes may request owner-slot 0; the requester's send_mask
-    zeroes them at scatter, so the mask never has to cross the wire.
+    table (n_per, d) this worker's shard; send_* (G, k) its request
+    lanes, one row per member of the ``axis`` group; base this worker's
+    first global slot. -> (m_max, d) buffer with requested rows
+    scattered to ``send_pos`` (other rows zero). Padding lanes may
+    request owner-slot 0; the requester's send_mask zeroes them at
+    scatter, so the mask never has to cross the wire.
     """
     n_per, d = table.shape
-    req = jax.lax.all_to_all(send_ids, "data", 0, 0)      # (P, k) asks TO me
+    req = jax.lax.all_to_all(send_ids, axis, 0, 0)        # (G, k) asks TO me
     slot = jnp.clip(req - base, 0, n_per - 1)
-    rows = table[slot]                                    # (P, k, d) serve
-    got = jax.lax.all_to_all(rows, "data", 0, 0)          # (P, k, d) mine
+    rows = table[slot]                                    # (G, k, d) serve
+    got = jax.lax.all_to_all(rows, axis, 0, 0)            # (G, k, d) mine
     out = jnp.zeros((m_max, d), table.dtype)
     pos = jnp.where(send_mask, send_pos, 0).reshape(-1)
     contrib = jnp.where(send_mask.reshape(-1, 1), got.reshape(-1, d), 0)
     return out.at[pos].add(contrib)
+
+
+def pull_shard_two_tier(table: jnp.ndarray, send: dict, base, m_max: int,
+                        ici_axis="data",
+                        world_axes=("dcn", "data")) -> jnp.ndarray:
+    """Two-tier exchange body for a hierarchical mesh (DESIGN.md §6.7).
+
+    ``send`` holds the two-tier lanes from ``pack_pull_lanes_two_tier``:
+    ``intra_*`` (D, k_i) same-host requests exchanged over the cheap ici
+    ``ici_axis`` (owner = LOCAL device index, ids remain global -- slot
+    arithmetic on the serving side is base-relative either way), and
+    ``inter_*`` (P, k_x) cross-host requests over the flattened
+    ``world_axes`` pair. The two tiers' request sets are DISJOINT (a
+    miss is same-host xor cross-host) and every real position receives
+    exactly one nonzero contribution, so scatter-adding both tiers into
+    one zero buffer is bit-equal to the flat single-tier pull.
+    """
+    n_per, d = table.shape
+    out = jnp.zeros((m_max, d), table.dtype)
+    for pre, axis in (("intra", ici_axis), ("inter", world_axes)):
+        sid, spo, sma = (send[f"{pre}_ids"], send[f"{pre}_pos"],
+                         send[f"{pre}_mask"])
+        req = jax.lax.all_to_all(sid, axis, 0, 0)
+        rows = table[jnp.clip(req - base, 0, n_per - 1)]
+        got = jax.lax.all_to_all(rows, axis, 0, 0)
+        pos = jnp.where(sma, spo, 0).reshape(-1)
+        contrib = jnp.where(sma.reshape(-1, 1), got.reshape(-1, d), 0)
+        out = out.at[pos].add(contrib)
+    return out
 
 
 def pull_features(mesh, table: jnp.ndarray, send_ids: jnp.ndarray,

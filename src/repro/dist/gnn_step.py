@@ -1,4 +1,5 @@
-"""Scan-pipelined RapidGNN epoch on an SPMD ``("data",)`` mesh.
+"""Scan-pipelined RapidGNN epoch on an SPMD mesh -- flat ``("data",)``
+or hierarchical ``("dcn", "data")`` (two-tier pulls, DESIGN.md §6.7).
 
 This is Alg. 1's prefetcher/trainer overlap expressed INSIDE the compiled
 step program (DESIGN.md §6.3): a ``jax.lax.scan`` over the S steps of an
@@ -47,7 +48,13 @@ from repro.kernels.assemble.ops import assemble_features
 from repro.kernels.cache_lookup.ops import to_device_ids
 from repro.models.gnn import GNNConfig, loss_fn
 from repro.dist.feature_a2a import (build_pull_plan, pack_pull_lanes,
-                                    pull_shard)
+                                    pack_pull_lanes_two_tier, pull_shard,
+                                    pull_shard_two_tier)
+
+#: pull-plan keys of the collated epoch dict, per topology tier layout
+PULL_KEYS_FLAT = ("send_ids", "send_pos", "send_mask")
+PULL_KEYS_HIER = ("intra_ids", "intra_pos", "intra_mask",
+                  "inter_ids", "inter_pos", "inter_mask")
 
 #: int64 cache padding; survives the int32 canonicalisation cast exactly
 #: and matches the ``cache_lookup`` device sentinel.
@@ -235,21 +242,65 @@ def epoch_k_max(es_list: Sequence[EpochSchedule],
     return max(1, int(np.bincount(eb * P_ + owner_miss).max()))
 
 
+def epoch_k_max_split(es_list: Sequence[EpochSchedule],
+                      caches: Sequence[DeviceCache], dv: DeviceView,
+                      topo) -> tuple:
+    """Exact static lane bounds for the TWO-TIER plan: ``(k_max_intra,
+    k_max_inter)`` over all (worker, step) pairs of the epoch, split by
+    whether the missed id's owner shares the requesting worker's host
+    (same vectorized bincount pass as ``epoch_k_max``, one group key
+    per tier). Both bounds floor at 1 so degenerate tiers (single-host
+    epochs, all-local epochs) still compile static shapes."""
+    flat = _epoch_flat(es_list, dv)
+    if flat is None:
+        return 1, 1
+    miss, owner_miss = _classify_misses(flat, caches, dv)
+    if owner_miss.size == 0:
+        return 1, 1
+    P_ = len(es_list)
+    D = topo.devices_per_host
+    eb, _ = _miss_coords(flat, miss)
+    req = flat["worker"][eb]
+    same = topo.same_host(owner_miss, req)
+    k_i = k_x = 1
+    if same.any():
+        k_i = int(np.bincount(
+            eb[same] * D + topo.local_of(owner_miss[same])).max())
+    if (~same).any():
+        k_x = int(np.bincount(eb[~same] * P_ + owner_miss[~same]).max())
+    return max(1, k_i), max(1, k_x)
+
+
 def _alloc_epoch(P_: int, S: int, batch_size: int, m_max: int,
-                 edge_max: Sequence[int], k_max: int
+                 edge_max: Sequence[int], k_max: int, topology=None,
+                 k_max_inter: Optional[int] = None
                  ) -> Dict[str, np.ndarray]:
-    """Empty (S, P, ...) device-layout epoch: every step fully masked."""
-    return {
+    """Empty (S, P, ...) device-layout epoch: every step fully masked.
+    With a hierarchical ``topology`` the pull lanes split into the
+    two-tier layout -- intra (S, P, D, k_max) + inter (S, P, P,
+    k_max_inter) -- instead of the flat send_* (S, P, P, k_max)."""
+    out = {
         "input_nodes": np.full((S, P_, m_max), -1, np.int64),
         "labels": np.zeros((S, P_, batch_size), np.int32),
         "seed_mask": np.zeros((S, P_, batch_size), bool),
-        "send_ids": np.zeros((S, P_, P_, k_max), np.int32),
-        "send_pos": np.zeros((S, P_, P_, k_max), np.int32),
-        "send_mask": np.zeros((S, P_, P_, k_max), bool),
         "edge_src": [np.zeros((S, P_, e), np.int32) for e in edge_max],
         "edge_dst": [np.zeros((S, P_, e), np.int32) for e in edge_max],
         "edge_mask": [np.zeros((S, P_, e), bool) for e in edge_max],
     }
+    if topology is not None and topology.is_hierarchical:
+        D = topology.devices_per_host
+        k_x = k_max_inter if k_max_inter is not None else k_max
+        out["intra_ids"] = np.zeros((S, P_, D, k_max), np.int32)
+        out["intra_pos"] = np.zeros((S, P_, D, k_max), np.int32)
+        out["intra_mask"] = np.zeros((S, P_, D, k_max), bool)
+        out["inter_ids"] = np.zeros((S, P_, P_, k_x), np.int32)
+        out["inter_pos"] = np.zeros((S, P_, P_, k_x), np.int32)
+        out["inter_mask"] = np.zeros((S, P_, P_, k_x), bool)
+    else:
+        out["send_ids"] = np.zeros((S, P_, P_, k_max), np.int32)
+        out["send_pos"] = np.zeros((S, P_, P_, k_max), np.int32)
+        out["send_mask"] = np.zeros((S, P_, P_, k_max), bool)
+    return out
 
 
 def _check_num_steps(es_list: Sequence[EpochSchedule], S: int) -> None:
@@ -265,7 +316,9 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
                          caches: Sequence[DeviceCache], dv: DeviceView,
                          labels: np.ndarray, batch_size: int, m_max: int,
                          edge_max: Sequence[int], k_max: int,
-                         num_steps: int) -> Dict[str, np.ndarray]:
+                         num_steps: int, topology=None,
+                         k_max_inter: Optional[int] = None
+                         ) -> Dict[str, np.ndarray]:
     """Pack an epoch into the (S, P, ...) device layout -- VECTORIZED.
 
     Per (step, worker): the padded collated batch (ids remapped to
@@ -297,11 +350,18 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     still participates in every collective but trains on nothing.
     Raises when a worker has MORE batches than ``num_steps`` (silent
     truncation would corrupt the fetch accounting).
+
+    With a hierarchical ``topology`` the pull lanes come out two-tier
+    (``intra_*``/``inter_*`` via ``pack_pull_lanes_two_tier``, bounds
+    ``k_max``/``k_max_inter``) instead of flat ``send_*`` -- everything
+    else (batches, labels, edges) is layout-identical.
     """
     P_ = len(es_list)
     S = num_steps
     _check_num_steps(es_list, S)
-    out = _alloc_epoch(P_, S, batch_size, m_max, edge_max, k_max)
+    hier = topology is not None and topology.is_hierarchical
+    out = _alloc_epoch(P_, S, batch_size, m_max, edge_max, k_max,
+                       topology=topology, k_max_inter=k_max_inter)
     flat = _epoch_flat(es_list, dv)
     if flat is None:
         return out
@@ -344,6 +404,19 @@ def collate_device_epoch(es_list: Sequence[EpochSchedule],
     eb, col = _miss_coords(flat, miss)
     # assume_unique: the sampler dedupes input_nodes per batch, so no
     # (group, id, pos) duplicates can exist
+    if hier:
+        D = topology.devices_per_host
+        k_x = k_max_inter if k_max_inter is not None else k_max
+        intra, inter = pack_pull_lanes_two_tier(
+            dev[miss], col, row[eb], owner_miss, flat["worker"][eb],
+            S * P_, topology, k_max, k_x, assume_unique=True)
+        out["intra_ids"] = intra[0].reshape(S, P_, D, k_max)
+        out["intra_pos"] = intra[1].reshape(S, P_, D, k_max)
+        out["intra_mask"] = intra[2].reshape(S, P_, D, k_max)
+        out["inter_ids"] = inter[0].reshape(S, P_, P_, k_x)
+        out["inter_pos"] = inter[1].reshape(S, P_, P_, k_x)
+        out["inter_mask"] = inter[2].reshape(S, P_, P_, k_x)
+        return out
     sids, spos, smask, _ = pack_pull_lanes(
         dev[miss], col, row[eb], owner_miss, S * P_, P_, k_max,
         assume_unique=True)
@@ -426,23 +499,26 @@ def prefetch_stream(send: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     runs) but requests only zero lanes -- fetch accounting is unchanged
     because lane counts come from the un-rolled host arrays.
 
-    send: dict of (S, ...) arrays with keys send_ids/send_pos/send_mask.
+    send: dict of (S, ...) arrays -- the flat ``send_*`` triplet or the
+    two-tier ``intra_*``/``inter_*`` sextet; keys ending in ``mask``
+    are AND-masked, the rest zeroed on the dead final element.
     """
-    S = send["send_mask"].shape[0]
-    rolled = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), send)
-    live = jnp.arange(S) < S - 1
-    bshape = (S,) + (1,) * (rolled["send_mask"].ndim - 1)
-    live = live.reshape(bshape)
-    return {
-        "send_ids": jnp.where(live, rolled["send_ids"], 0),
-        "send_pos": jnp.where(live, rolled["send_pos"], 0),
-        "send_mask": rolled["send_mask"] & live,
-    }
+    S = next(iter(send.values())).shape[0]
+    out = {}
+    for key, a in send.items():
+        rolled = jnp.roll(a, -1, axis=0)
+        live = (jnp.arange(S) < S - 1).reshape((S,) + (1,) * (a.ndim - 1))
+        out[key] = (rolled & live if key.endswith("mask")
+                    else jnp.where(live, rolled, 0))
+    return out
 
 
-def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x):
+def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x,
+                      axis="data"):
     """Shared scan-body tail for both epoch programs: batch loss/grad,
-    pmean over ``data`` (params stay replicated), optimizer update.
+    pmean over the full worker ``axis`` (``"data"`` flat, ``("dcn",
+    "data")`` hierarchical -- the same all-group AllReduce, so params
+    stay replicated and curves stay bit-comparable), optimizer update.
     -> (params, opt_state, loss, acc)."""
 
     def lf(p):
@@ -450,14 +526,15 @@ def _pmean_train_step(cfg: GNNConfig, opt, params, opt_state, feats, x):
                        x["edge_mask"], x["labels"], x["seed_mask"])
 
     (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(params)
-    grads, loss, acc = jax.lax.pmean((grads, loss, acc), "data")
+    grads, loss, acc = jax.lax.pmean((grads, loss, acc), axis)
     p2, o2 = opt.update(grads, opt_state, params)
     return p2, o2, loss, acc
 
 
 def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
                          assemble_backend: str = "auto",
-                         assemble_interpret: bool = False):
+                         assemble_interpret: bool = False,
+                         topology=None):
     """-> epoch_fn(params, opt_state, table, offsets, cache_ids,
     cache_feats, batches) running S pipelined steps on the mesh.
 
@@ -466,9 +543,18 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
     assembled by the fused single-pass kernel (local shard > cache C_s >
     pulled residuals resolved per row, one output materialization --
     ``kernels/assemble``, backend selected by ``assemble_backend``);
-    grads are pmean'd over ``data`` so params stay replicated. Returns
-    (params, opt_state, losses (S,), accs (S,)).
+    grads are pmean'd over the full worker axis so params stay
+    replicated. Returns (params, opt_state, losses (S,), accs (S,)).
+
+    A hierarchical ``topology`` switches the pull to the TWO-TIER
+    exchange (``pull_shard_two_tier``: intra-host lanes over the ici
+    axis, cross-host lanes over the flattened (dcn, data) pair) and the
+    worker axis to ``("dcn", "data")`` -- bit-equal curves, cheaper
+    same-host wires (DESIGN.md §6.7).
     """
+    hier = topology is not None and topology.is_hierarchical
+    ax = topology.worker_axes if topology is not None else "data"
+    pull_keys = PULL_KEYS_HIER if hier else PULL_KEYS_FLAT
 
     def epoch_fn(params, opt_state, table, offsets, cache_ids,
                  cache_feats, batches):
@@ -481,6 +567,9 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
             bt = jax.tree.map(lambda a: a[:, 0], bt)   # drop worker dim
 
             def pull(send):
+                if hier:
+                    return pull_shard_two_tier(tbl, send, base, m_max,
+                                               world_axes=ax)
                 return pull_shard(tbl, send["send_ids"], send["send_pos"],
                                   send["send_mask"], base, m_max)
 
@@ -490,7 +579,7 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
                     backend=assemble_backend,
                     interpret=assemble_interpret)
 
-            send = {k: bt[k] for k in ("send_ids", "send_pos", "send_mask")}
+            send = {k: bt[k] for k in pull_keys}
             # prefetch stream: step i's body pulls step i+1's misses; the
             # wrapped final element is fully masked (its pull would be
             # discarded), so no real lanes ride the wasted wrap fetch
@@ -510,7 +599,7 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
                 nxt = pull(x["next_send"])        # overlap: no dep on train
                 feats = assemble(pulled, x["input_nodes"])
                 p2, o2, loss, acc = _pmean_train_step(
-                    cfg, opt, params, opt_state, feats, x)
+                    cfg, opt, params, opt_state, feats, x, axis=ax)
                 return (p2, o2, nxt), (loss, acc)
 
             (params, opt_state, _), (losses, accs) = jax.lax.scan(
@@ -519,8 +608,8 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
 
         return shard_map(
             device_epoch, mesh=mesh,
-            in_specs=(P(), P(), P("data"), P("data"), P("data"),
-                      P("data"), P(None, "data")),
+            in_specs=(P(), P(), P(ax), P(ax), P(ax),
+                      P(ax), P(None, ax)),
             out_specs=(P(), P(), P(), P()), check_rep=False,
         )(params, opt_state, table, offsets, cache_ids, cache_feats,
           batches)
@@ -530,7 +619,8 @@ def make_pipelined_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
 
 def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
                         assemble_backend: str = "auto",
-                        assemble_interpret: bool = False):
+                        assemble_interpret: bool = False,
+                        topology=None):
     """-> epoch_fn(params, opt_state, table, offsets, batches): the
     DGL-style on-demand baseline as a NON-overlapped scan.
 
@@ -543,8 +633,13 @@ def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
     every step. This is the device analogue of
     ``core.runtime.BaselineRunner``, making device rapid-vs-baseline
     step time directly measurable (DESIGN.md §6.5). Collate its batches
-    with EMPTY caches so every remote id rides the pull lanes.
+    with EMPTY caches so every remote id rides the pull lanes. A
+    hierarchical ``topology`` switches pulls to the two-tier exchange,
+    same as ``make_pipelined_epoch``.
     """
+    hier = topology is not None and topology.is_hierarchical
+    ax = topology.worker_axes if topology is not None else "data"
+    pull_keys = PULL_KEYS_HIER if hier else PULL_KEYS_FLAT
 
     def epoch_fn(params, opt_state, table, offsets, batches):
 
@@ -557,28 +652,31 @@ def make_ondemand_epoch(cfg: GNNConfig, opt, mesh, m_max: int,
                 params, opt_state = carry
                 # pull THIS step's remote rows: the train step below
                 # depends on it, so nothing overlaps (on-demand fetch)
-                pulled = pull_shard(tbl, x["send_ids"], x["send_pos"],
-                                    x["send_mask"], base, m_max)
+                if hier:
+                    pulled = pull_shard_two_tier(tbl, x, base, m_max,
+                                                 world_axes=ax)
+                else:
+                    pulled = pull_shard(tbl, x["send_ids"], x["send_pos"],
+                                        x["send_mask"], base, m_max)
                 feats = assemble_features(
                     tbl, base, None, None,
                     to_device_ids(x["input_nodes"]), pulled,
                     backend=assemble_backend,
                     interpret=assemble_interpret)
                 p2, o2, loss, acc = _pmean_train_step(
-                    cfg, opt, params, opt_state, feats, x)
+                    cfg, opt, params, opt_state, feats, x, axis=ax)
                 return (p2, o2), (loss, acc)
 
             xs = {k: bt[k] for k in
-                  ("input_nodes", "labels", "seed_mask", "send_ids",
-                   "send_pos", "send_mask", "edge_src", "edge_dst",
-                   "edge_mask")}
+                  ("input_nodes", "labels", "seed_mask", "edge_src",
+                   "edge_dst", "edge_mask") + pull_keys}
             (params, opt_state), (losses, accs) = jax.lax.scan(
                 step, (params, opt_state), xs)
             return params, opt_state, losses, accs
 
         return shard_map(
             device_epoch, mesh=mesh,
-            in_specs=(P(), P(), P("data"), P("data"), P(None, "data")),
+            in_specs=(P(), P(), P(ax), P(ax), P(None, ax)),
             out_specs=(P(), P(), P(), P()), check_rep=False,
         )(params, opt_state, table, offsets, batches)
 

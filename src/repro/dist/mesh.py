@@ -2,11 +2,15 @@
 
 Axis vocabulary (DESIGN.md §6): ``data`` is the RapidGNN worker axis --
 one mesh slot per paper "worker", holding that worker's feature-table
-partition, steady cache C_s, and batch stream. ``model`` (tensor/expert
-parallel) and ``pod`` (multi-pod data parallel) are the transformer
-substrate's axes. Everything here is a FUNCTION of an explicit shape so
-importing this module never touches jax device state (device count locks
-at first backend init; the dry-runs set XLA_FLAGS before importing jax).
+partition, steady cache C_s, and batch stream. On a hierarchical
+multi-host topology (``repro.dist.topology.Topology``, DESIGN.md §6.7)
+``data`` becomes the INTRA-host ici axis and a ``dcn`` axis sits OUTER,
+so the flat worker ordinal is the row-major ``("dcn", "data")``
+flattening. ``model`` (tensor/expert parallel) and ``pod`` (multi-pod
+data parallel) are the transformer substrate's axes. Everything here is
+a FUNCTION of an explicit shape so importing this module never touches
+jax device state (device count locks at first backend init; the
+dry-runs set XLA_FLAGS before importing jax).
 """
 from __future__ import annotations
 
@@ -23,9 +27,10 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
 def dp_axes(mesh) -> Optional[Union[str, Tuple[str, ...]]]:
     """The data-parallel axes of ``mesh`` as a PartitionSpec entry.
 
-    Returns a tuple of the present batch-sharding axes (``pod`` outermost,
-    then ``data``) or None when the mesh has neither -- usable directly as
-    one entry of a ``PartitionSpec``.
+    Returns a tuple of the present batch-sharding axes (``pod``
+    outermost, then ``dcn``, then ``data``) or None when the mesh has
+    none of them -- usable directly as one entry of a
+    ``PartitionSpec``.
     """
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axes = tuple(a for a in ("pod", "dcn", "data") if a in mesh.axis_names)
     return axes if axes else None

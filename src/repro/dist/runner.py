@@ -47,8 +47,10 @@ from repro.fault.inject import TransientFault, fault_point
 from repro.models.gnn import GNNConfig, init_params
 from repro.dist.gnn_step import (DeviceCache, DeviceView,
                                  collate_device_epoch, empty_caches,
-                                 epoch_k_max, make_ondemand_epoch,
+                                 epoch_k_max, epoch_k_max_split,
+                                 make_ondemand_epoch,
                                  make_pipelined_epoch, stack_caches)
+from repro.dist.topology import Topology
 from repro.train.checkpoint import save_run_state
 
 
@@ -80,6 +82,15 @@ class DeviceEpochReport:
     degrade_reason: str = ""
     #: staging retries spent producing THIS epoch's buffers
     stage_retries: int = 0
+    #: two-tier split of ``miss_lanes`` on a hierarchical topology:
+    #: same-host lanes (cheap ici wire) vs cross-host lanes (DCN wire);
+    #: ``intra + inter == miss_lanes`` elementwise (flat: intra =
+    #: miss_lanes, inter = 0 -- every peer counts as same-host)
+    intra_lanes: Optional[np.ndarray] = None    # (P,)
+    inter_lanes: Optional[np.ndarray] = None    # (P,)
+    #: padded-row split of ``wire_rows`` by tier (flat: all intra)
+    intra_wire_rows: int = 0
+    inter_wire_rows: int = 0
 
     @property
     def total_miss_lanes(self) -> int:
@@ -89,13 +100,27 @@ class DeviceEpochReport:
         """True feature bytes requested (== host-sim remote_bytes)."""
         return self.total_miss_lanes * feat_dim * itemsize
 
+    def request_bytes(self, itemsize: int = 4) -> int:
+        """Id bytes shipped on the a2a REQUEST legs (the padded int32 id
+        matrices of every pull this epoch) -- the previously
+        unaccounted half of the wire (DESIGN.md §6.7)."""
+        return int(self.wire_rows) * itemsize
+
     def to_dict(self) -> Dict[str, Any]:
         """JSON-ready export: ``repro.eval.cells.device_cell_result``
         stores these per-epoch records on the campaign ``CellResult``
         (the ``epoch_metrics`` field of ``BENCH_paper.json``)."""
+        intra = (self.miss_lanes if self.intra_lanes is None
+                 else self.intra_lanes)
+        inter = (np.zeros_like(self.miss_lanes)
+                 if self.inter_lanes is None else self.inter_lanes)
         return {"epoch": self.epoch, "steps": self.steps,
                 "miss_lanes": [int(x) for x in self.miss_lanes],
                 "wire_rows": int(self.wire_rows),
+                "intra_lanes": [int(x) for x in intra],
+                "inter_lanes": [int(x) for x in inter],
+                "intra_wire_rows": int(self.intra_wire_rows),
+                "inter_wire_rows": int(self.inter_wire_rows),
                 "losses": [float(x) for x in self.losses],
                 "accs": [float(x) for x in self.accs],
                 "wall_time_s": float(self.wall_time_s),
@@ -120,7 +145,8 @@ class _DeviceRunnerBase:
                  max_stage_retries: int = 2,
                  stage_retry_base_s: float = 0.01,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 1):
+                 checkpoint_every: int = 1,
+                 topology: Optional[Topology] = None):
         self.assemble_backend = assemble_backend
         # supervision knobs (DESIGN.md §10): a deadline on the overlapped
         # stage future, a bounded retry budget for transient stage
@@ -139,6 +165,17 @@ class _DeviceRunnerBase:
         if mesh.devices.size != self.P:
             raise ValueError(f"{self.P} schedules for a "
                              f"{mesh.devices.size}-device mesh")
+        self.topo = topology if topology is not None \
+            else Topology.flat(self.P)
+        if self.topo.num_workers != self.P:
+            raise ValueError(
+                f"topology {self.topo.describe()} describes "
+                f"{self.topo.num_workers} workers, runner has {self.P}")
+        if self.topo.is_hierarchical and tuple(mesh.axis_names) != \
+                ("dcn", "data"):
+            raise ValueError(
+                f"hierarchical topology needs a ('dcn', 'data') mesh, "
+                f"got axes {tuple(mesh.axis_names)}")
         n_epochs = {len(ws.epochs) for ws in self.schedules}
         if len(n_epochs) != 1:
             raise ValueError(f"workers disagree on epoch count: {n_epochs}")
@@ -161,15 +198,24 @@ class _DeviceRunnerBase:
         # (the paper's 2*n_hot*d memory bound, not E*n_hot*d).
         self.m_max, self.edge_max = merge_pad_bounds(self.schedules)
         self.n_hot = max(1, max(ws.n_hot for ws in self.schedules))
-        self.num_steps, self.k_max = 0, 1
+        # hierarchical: k_max bounds the INTRA tier, k_max_inter the
+        # cross-host DCN tier; flat: k_max is the single-tier bound and
+        # k_max_inter stays 1 (unused)
+        self.num_steps, self.k_max, self.k_max_inter = 0, 1, 1
         for e in range(self.num_epochs):
             es_list = [ws.epoch(e) for ws in self.schedules]
             # ids-only cache view: the lane bound never touches feats
             ids_only = self._caches_for(es_list, ids_only=True)
             self.num_steps = max(self.num_steps,
                                  max(es.num_batches for es in es_list))
-            self.k_max = max(self.k_max,
-                             epoch_k_max(es_list, ids_only, self.dv))
+            if self.topo.is_hierarchical:
+                k_i, k_x = epoch_k_max_split(es_list, ids_only, self.dv,
+                                             self.topo)
+                self.k_max = max(self.k_max, k_i)
+                self.k_max_inter = max(self.k_max_inter, k_x)
+            else:
+                self.k_max = max(self.k_max,
+                                 epoch_k_max(es_list, ids_only, self.dv))
 
         self.trace_count = 0
         self._fn = jax.jit(self._counted(self._make_epoch_fn()))
@@ -206,23 +252,54 @@ class _DeviceRunnerBase:
         out["stage_s"] = dt
         return out
 
-    def _stage_inner(self, e: int) -> Dict[str, Any]:
-        es_list = [ws.epoch(e) for ws in self.schedules]
-        caches = self._caches_for(es_list)
+    def _collate_and_account(self, es_list, caches, k_max: int,
+                             k_max_inter: int) -> Dict[str, Any]:
+        """Collate one epoch and derive its per-tier lane/wire
+        accounting: true per-requesting-worker lane counts from the
+        masks, padded wire rows from the static shapes. On a flat
+        topology the whole exchange counts as the intra tier (every
+        peer is same-host); hierarchical splits by tier, and the tiers
+        sum to exactly what the flat plan would count -- the byte-sum
+        identity ``verify`` pins (DESIGN.md §6.7)."""
         batches = collate_device_epoch(
             es_list, caches, self.dv, self.labels, self.batch_size,
-            self.m_max, self.edge_max, self.k_max, self.num_steps)
-        # (S, P, P, k) -> per-requesting-worker true lane counts
-        lanes = batches["send_mask"].sum(axis=(0, 2, 3)).astype(np.int64)
+            self.m_max, self.edge_max, k_max, self.num_steps,
+            topology=self.topo, k_max_inter=k_max_inter)
         # padded rows the program's all_to_alls move: the pipelined epoch
         # issues one extra pull (the pre-scan pulled0; its final wrap pull
         # is part of the S in-scan pulls), the on-demand epoch exactly S
-        S, P_, _, k = batches["send_mask"].shape
-        staged = {
+        pulls = self.num_steps + self.pulls_beyond_steps
+        if self.topo.is_hierarchical:
+            intra = batches["intra_mask"].sum(axis=(0, 2, 3)) \
+                .astype(np.int64)
+            inter = batches["inter_mask"].sum(axis=(0, 2, 3)) \
+                .astype(np.int64)
+            _, P_, D, k_i = batches["intra_mask"].shape
+            k_x = batches["inter_mask"].shape[-1]
+            wire_intra = pulls * P_ * D * k_i
+            wire_inter = pulls * P_ * P_ * k_x
+        else:
+            intra = batches["send_mask"].sum(axis=(0, 2, 3)) \
+                .astype(np.int64)
+            inter = np.zeros_like(intra)
+            _, P_, _, k = batches["send_mask"].shape
+            wire_intra = pulls * P_ * P_ * k
+            wire_inter = 0
+        return {
             "batches": jax.tree.map(jnp.asarray, batches),
-            "lanes": lanes,
-            "wire_rows": (S + self.pulls_beyond_steps) * P_ * P_ * k,
+            "lanes": intra + inter,
+            "intra_lanes": intra,
+            "inter_lanes": inter,
+            "wire_rows": wire_intra + wire_inter,
+            "intra_wire_rows": wire_intra,
+            "inter_wire_rows": wire_inter,
         }
+
+    def _stage_inner(self, e: int) -> Dict[str, Any]:
+        es_list = [ws.epoch(e) for ws in self.schedules]
+        caches = self._caches_for(es_list)
+        staged = self._collate_and_account(es_list, caches, self.k_max,
+                                           self.k_max_inter)
         if self.uses_cache:
             # the staged C_s can be LOST (fault plane): the epoch then
             # degrades to an uncached rebuild instead of failing the run
@@ -283,21 +360,20 @@ class _DeviceRunnerBase:
         es_list = [ws.epoch(e) for ws in self.schedules]
         d = self.dv.table.shape[-1]
         caches = empty_caches(self.P, d)
-        k = max(self.k_max, epoch_k_max(es_list, caches, self.dv))
-        batches = collate_device_epoch(
-            es_list, caches, self.dv, self.labels, self.batch_size,
-            self.m_max, self.edge_max, k, self.num_steps)
-        lanes = batches["send_mask"].sum(axis=(0, 2, 3)).astype(np.int64)
-        S, P_, _, k_ = batches["send_mask"].shape
+        if self.topo.is_hierarchical:
+            k_i, k_x = epoch_k_max_split(es_list, caches, self.dv,
+                                         self.topo)
+            k = max(self.k_max, k_i)
+            kx = max(self.k_max_inter, k_x)
+        else:
+            k = max(self.k_max, epoch_k_max(es_list, caches, self.dv))
+            kx = self.k_max_inter
+        staged = self._collate_and_account(es_list, caches, k, kx)
         cids, cfeats = stack_caches(caches, self.dv, self.n_hot)
-        return {
-            "batches": jax.tree.map(jnp.asarray, batches),
-            "lanes": lanes,
-            "wire_rows": (S + self.pulls_beyond_steps) * P_ * P_ * k_,
-            "cids": jnp.asarray(cids),
-            "cfeats": jnp.asarray(cfeats),
-            "stage_s": 0.0,
-        }
+        staged["cids"] = jnp.asarray(cids)
+        staged["cfeats"] = jnp.asarray(cfeats)
+        staged["stage_s"] = 0.0
+        return staged
 
     # -- the epoch loop --------------------------------------------------
 
@@ -357,6 +433,10 @@ class _DeviceRunnerBase:
                     epoch=e, steps=self.num_steps,
                     miss_lanes=staged["lanes"],
                     wire_rows=staged["wire_rows"],
+                    intra_lanes=staged.get("intra_lanes"),
+                    inter_lanes=staged.get("inter_lanes"),
+                    intra_wire_rows=staged.get("intra_wire_rows", 0),
+                    inter_wire_rows=staged.get("inter_wire_rows", 0),
                     losses=losses, accs=accs,
                     wall_time_s=time.perf_counter() - t0,
                     stage_s=(nxt["stage_s"] if nxt is not None else 0.0),
@@ -395,7 +475,8 @@ class DeviceRapidGNNRunner(_DeviceRunnerBase):
     def _make_epoch_fn(self):
         return make_pipelined_epoch(self.cfg, self.opt, self.mesh,
                                     self.m_max,
-                                    assemble_backend=self.assemble_backend)
+                                    assemble_backend=self.assemble_backend,
+                                    topology=self.topo)
 
     def _run_epoch(self, params, opt_state, table, offsets, staged):
         return self._fn(params, opt_state, table, offsets, staged["cids"],
@@ -410,7 +491,8 @@ class DeviceBaselineRunner(_DeviceRunnerBase):
     def _make_epoch_fn(self):
         return make_ondemand_epoch(self.cfg, self.opt, self.mesh,
                                    self.m_max,
-                                   assemble_backend=self.assemble_backend)
+                                   assemble_backend=self.assemble_backend,
+                                   topology=self.topo)
 
     def _run_epoch(self, params, opt_state, table, offsets, staged):
         return self._fn(params, opt_state, table, offsets,

@@ -74,6 +74,21 @@ class CellResult:
     wire_rows: int = 0
     trace_count: int = 0
     device_cache_bytes: int = 0
+    #: request-leg wire bytes (the id/pos lane tensors shipped through
+    #: the all_to_all BEFORE the payload comes back); device backend
+    #: only, == wire_rows * index-lane itemsize by construction
+    request_bytes: int = 0
+    #: two-tier topology split (device backend; on a flat mesh the whole
+    #: exchange is the intra tier and every ``inter_*`` field is 0).
+    #: Identities pinned by repro.eval.differential:
+    #:   intra_misses + inter_misses == cache_misses
+    #:   intra_bytes  + inter_bytes  == remote_bytes (payload leg)
+    intra_misses: int = 0
+    inter_misses: int = 0
+    intra_bytes: int = 0
+    inter_bytes: int = 0
+    intra_wire_rows: int = 0
+    inter_wire_rows: int = 0
     stage_time_s: float = 0.0
     #: staging wall left exposed after training (device backend with
     #: background staging; ~stage_time_s on the legacy synchronous path)
@@ -336,7 +351,7 @@ def device_child_main(spec_path: str, out_path: str) -> None:
 def _build_device_scenario(spec: CellSpec) -> dict:
     from repro.graph import load_dataset, partition_graph, KHopSampler
     from repro.core import build_schedule
-    from repro.dist import DeviceView, make_mesh
+    from repro.dist import DeviceView
 
     g = load_dataset(spec.dataset)
     pg = partition_graph(g, spec.workers, spec.partition_method)
@@ -349,9 +364,12 @@ def _build_device_scenario(spec: CellSpec) -> dict:
                                 compiler=spec.effective_compiler,
                                 lazy=spec.schedule_backend == "device")
                  for w in range(spec.workers)]
+    # NOTE: no mesh here -- the scenario cache is keyed by
+    # ``scenario_key()``, which deliberately excludes ``topology`` (flat
+    # and hierarchical cells share schedules by the parity contract), so
+    # the mesh is a per-CELL artifact built in ``_run_device_cell``.
     return {"g": g, "pg": pg, "schedules": schedules,
-            "dv": DeviceView.build(pg),
-            "mesh": make_mesh((spec.workers,), ("data",))}
+            "dv": DeviceView.build(pg)}
 
 
 def _run_device_cell(spec: CellSpec, sc: dict) -> CellResult:
@@ -364,10 +382,12 @@ def _run_device_cell(spec: CellSpec, sc: dict) -> CellResult:
     cfg = GNNConfig(kind="sage", in_dim=g.feat_dim,
                     hidden_dim=spec.hidden, num_classes=g.num_classes,
                     num_layers=len(spec.fanouts))
+    topo = spec.topology_obj()
     cls = DeviceRapidGNNRunner if spec.is_rapid else DeviceBaselineRunner
-    runner = cls(schedules, sc["dv"], cfg, AdamW(lr=3e-3), sc["mesh"],
-                 spec.batch_size, g.labels, seed=spec.seed,
-                 stage_deadline_s=spec.stage_deadline_s)
+    runner = cls(schedules, sc["dv"], cfg, AdamW(lr=3e-3),
+                 topo.make_mesh(), spec.batch_size, g.labels,
+                 seed=spec.seed, stage_deadline_s=spec.stage_deadline_s,
+                 topology=topo)
     plan = (plan_from_profile(spec.fault_profile, seed=spec.fault_seed)
             if spec.fault_profile != "none" else None)
     with active_plan(plan):
@@ -399,6 +419,8 @@ def device_cell_result(spec: CellSpec, g, schedules, runner,
         vec_bytes = sum(int(ws.epoch(r.epoch).cache_ids.shape[0]) * row
                         for ws in schedules for r in reports)
     payload = lanes_total * row
+    intra_misses = sum(sum(d["intra_lanes"]) for d in rep_dicts)
+    inter_misses = sum(sum(d["inter_lanes"]) for d in rep_dicts)
     return CellResult(
         spec=spec.to_dict(), feat_dim=g.feat_dim,
         itemsize=int(g.features.itemsize),
@@ -418,6 +440,11 @@ def device_cell_result(spec: CellSpec, g, schedules, runner,
         energy=_energy(spec, warm_wall),
         epoch_metrics=rep_dicts,
         wire_rows=sum(int(r.wire_rows) for r in reports),
+        request_bytes=sum(r.request_bytes() for r in reports),
+        intra_misses=intra_misses, inter_misses=inter_misses,
+        intra_bytes=intra_misses * row, inter_bytes=inter_misses * row,
+        intra_wire_rows=sum(int(r.intra_wire_rows) for r in reports),
+        inter_wire_rows=sum(int(r.inter_wire_rows) for r in reports),
         trace_count=int(runner.trace_count),
         stage_time_s=float(runner.stage_time_s),
         exposed_stage_s=float(runner.exposed_stage_s),

@@ -20,6 +20,12 @@ corrupted counter in the artifact is caught exactly like a live one):
                      imply bit-identical loss curves (the cache is
                      lossless), and rapid may never fetch more than the
                      baseline.
+  * cross-topology -- flat vs hierarchical device cells of the SAME
+                     system + scenario: the two-tier pull plan is a
+                     repartition of the flat one, so miss matrices and
+                     loss curves must be BIT-equal and the hierarchical
+                     cell's intra + inter bytes must sum to the flat
+                     cell's remote bytes exactly (DESIGN.md §6.7).
 
 Every check yields a ``CheckResult``; ``verify_cells`` never raises --
 the campaign collects FAILs into the report and the CLI exits non-zero.
@@ -57,9 +63,15 @@ def _label(c: CellResult) -> str:
     base = (f"{s['backend']}/{s['system']}/{s['dataset']}"
             f"/b{s['batch_size']}/w{s['workers']}/h{s['n_hot']}"
             f"/e{s['epochs']}")
+    if _topology(c) != "flat":
+        base += f"/t{s['topology']}"
     if s.get("fault_profile", "none") != "none":
         base += f"/f{s['fault_profile']}"
     return base
+
+
+def _topology(c: CellResult) -> str:
+    return c.spec.get("topology", "flat")
 
 
 def _scenario(c: CellResult) -> Tuple:
@@ -106,6 +118,28 @@ def check_cell_internal(c: CellResult) -> List[CheckResult]:
             else FAIL,
             f"payload_bytes={c.payload_bytes} vs "
             f"lanes*row={c.cache_misses * c.row_bytes}"))
+        # request leg: the padded int32 id matrices every pull ships
+        # BEFORE the payload comes back (satellite bugfix: previously
+        # never accounted anywhere)
+        want_req = c.wire_rows * 4
+        out.append(CheckResult(
+            name, "request_bytes_identity",
+            PASS if c.request_bytes == want_req else FAIL,
+            f"request_bytes={c.request_bytes} vs "
+            f"wire_rows*4={want_req}"))
+        # two-tier split: tiers partition the flat counters exactly
+        # (flat cells: intra == total, inter == 0)
+        tier_ok = (c.intra_misses + c.inter_misses == c.cache_misses
+                   and c.intra_bytes + c.inter_bytes == c.remote_bytes
+                   and c.intra_wire_rows + c.inter_wire_rows
+                   == c.wire_rows)
+        out.append(CheckResult(
+            name, "tier_sum_identity",
+            PASS if tier_ok else FAIL,
+            f"intra+inter misses={c.intra_misses}+{c.inter_misses} vs "
+            f"{c.cache_misses}, bytes={c.intra_bytes}+{c.inter_bytes} "
+            f"vs {c.remote_bytes}, wire={c.intra_wire_rows}+"
+            f"{c.inter_wire_rows} vs {c.wire_rows}"))
     return out
 
 
@@ -186,6 +220,55 @@ def check_system_pair(rapid: CellResult, base: CellResult
         else:
             out.append(CheckResult(name, "loss_agreement", PASS,
                                    f"{rl.shape[0]} steps agree"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer 3b: flat vs hierarchical topology (same system, same scenario)
+# ---------------------------------------------------------------------------
+
+def check_topology_pair(flat: CellResult, hier: CellResult
+                        ) -> List[CheckResult]:
+    """Two-tier exchange vs its flat twin: the hierarchical plan is a
+    bit-exact repartition of the flat one (verified empirically for the
+    all_to_all semantics, pinned here for whole campaigns): same misses,
+    same losses, and the tier bytes sum to the flat payload exactly."""
+    out = []
+    name = f"{_label(flat)} <> {_label(hier)}"
+
+    fm = np.asarray(flat.miss_matrix, dtype=np.int64)
+    hm = np.asarray(hier.miss_matrix, dtype=np.int64)
+    if fm.shape != hm.shape or not np.array_equal(fm, hm):
+        out.append(CheckResult(
+            name, "topology_miss_parity", FAIL,
+            f"hierarchical miss matrix diverges from flat "
+            f"(flat total={int(fm.sum())}, hier total={int(hm.sum())})"))
+    else:
+        out.append(CheckResult(name, "topology_miss_parity", PASS,
+                               f"{fm.shape[0]}x{fm.shape[1]} matrix "
+                               f"equal, total={int(fm.sum())}"))
+
+    tier_sum = hier.intra_bytes + hier.inter_bytes
+    out.append(CheckResult(
+        name, "topology_byte_sum",
+        PASS if tier_sum == flat.remote_bytes else FAIL,
+        f"intra+inter={hier.intra_bytes}+{hier.inter_bytes}={tier_sum} "
+        f"vs flat remote_bytes={flat.remote_bytes}"))
+
+    fl, hl = np.asarray(flat.losses), np.asarray(hier.losses)
+    if fl.shape != hl.shape:
+        out.append(CheckResult(name, "topology_loss_parity", FAIL,
+                               f"curve lengths {fl.shape} vs "
+                               f"{hl.shape}"))
+    elif not np.array_equal(fl, hl):
+        i = int(np.argmax(fl != hl))
+        out.append(CheckResult(
+            name, "topology_loss_parity", FAIL,
+            f"curves diverge at step {i}: {fl[i]!r} vs {hl[i]!r} "
+            f"(two-tier exchange must be bit-equal to flat)"))
+    else:
+        out.append(CheckResult(name, "topology_loss_parity", PASS,
+                               f"{fl.shape[0]} steps bit-equal"))
     return out
 
 
@@ -273,12 +356,21 @@ def verify_cells(cells: Sequence[CellResult]) -> List[CheckResult]:
     for c in cells:
         out.extend(check_cell_internal(c))
 
+    # topology is part of every grouping key: a hierarchical device cell
+    # shares its scenario key with its flat twin BY DESIGN (identical
+    # schedules), so keying on scenario alone would silently overwrite
+    # one of them and drop its checks
     by_sys: Dict[Tuple, Dict[str, CellResult]] = {}
     by_backend: Dict[Tuple, Dict[str, CellResult]] = {}
+    by_topo: Dict[Tuple, Dict[str, CellResult]] = {}
     for c in cells:
-        by_sys.setdefault((_scenario(c), c.system), {})[c.backend] = c
-        by_backend.setdefault((_scenario(c), c.backend),
+        topo = _topology(c)
+        by_sys.setdefault((_scenario(c), c.system, topo),
+                          {})[c.backend] = c
+        by_backend.setdefault((_scenario(c), c.backend, topo),
                               {})[c.system] = c
+        if c.backend == "device":
+            by_topo.setdefault((_scenario(c), c.system), {})[topo] = c
 
     for group in by_sys.values():
         if "host" in group and "device" in group:
@@ -291,6 +383,13 @@ def verify_cells(cells: Sequence[CellResult]) -> List[CheckResult]:
         for sysname, cell in sorted(group.items()):
             if sysname != "rapidgnn":
                 out.extend(check_system_pair(rapid, cell))
+    for group in by_topo.values():
+        flat = group.get("flat")
+        if flat is None:
+            continue
+        for topo, cell in sorted(group.items()):
+            if topo != "flat":
+                out.extend(check_topology_pair(flat, cell))
     return out
 
 

@@ -63,9 +63,11 @@ _REQUIRED_PAIR_FIELDS = (
 
 def _scenario_dict(c: CellResult) -> Dict:
     s = c.spec
-    return {k: s[k] for k in ("dataset", "batch_size", "workers",
-                              "n_hot", "epochs", "seed", "fanouts",
-                              "partition")}
+    d = {k: s[k] for k in ("dataset", "batch_size", "workers",
+                           "n_hot", "epochs", "seed", "fanouts",
+                           "partition")}
+    d["topology"] = s.get("topology", "flat")
+    return d
 
 
 def derive_pair(rapid: CellResult, base: CellResult) -> Dict:
@@ -115,9 +117,11 @@ def derive_pairs(cells: Sequence[CellResult]) -> List[Dict]:
     groups: Dict[tuple, Dict[str, CellResult]] = {}
     for c in cells:
         s = c.spec
+        # topology is in the key: a hierarchical device cell must pair
+        # with the hierarchical baseline, not overwrite the flat one
         key = (c.backend, s["dataset"], s["batch_size"], s["workers"],
                s["n_hot"], s["epochs"], s["seed"], tuple(s["fanouts"]),
-               s["partition"])
+               s["partition"], s.get("topology", "flat"))
         groups.setdefault(key, {})[c.system] = c
     out = []
     for _, group in sorted(groups.items(), key=lambda kv: str(kv[0])):

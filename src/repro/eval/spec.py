@@ -64,6 +64,14 @@ class CellSpec:
     #: deadline on the device runner's overlapped stage future (None =
     #: wait forever); a timing knob, NOT part of the scenario key.
     stage_deadline_s: Optional[float] = None
+    #: device-mesh topology: "flat" = the classic ("data",) mesh, or
+    #: "HxD" (e.g. "2x2") = H emulated hosts x D devices with two-tier
+    #: pull plans (repro.dist.topology, DESIGN.md §6.7). The two-tier
+    #: exchange is bit-equal to the flat one (the parity contract), so
+    #: like the schedule knobs this is EXCLUDED from ``scenario_key()``
+    #: -- a hierarchical cell pairs with its flat twin and the
+    #: intra+inter byte-sum identity is checked against it.
+    topology: str = "flat"
 
     def __post_init__(self):
         if self.backend not in ("host", "device"):
@@ -83,6 +91,12 @@ class CellSpec:
             if self.fault_profile not in PROFILES:
                 raise ValueError(f"unknown fault_profile "
                                  f"{self.fault_profile!r}")
+        if self.topology != "flat":
+            if self.backend != "device":
+                raise ValueError("hierarchical topology needs the device "
+                                 f"backend, got {self.backend!r}")
+            from repro.dist.topology import Topology
+            Topology.parse(self.topology, self.workers)  # validates HxD
         object.__setattr__(self, "fanouts", tuple(self.fanouts))
 
     @property
@@ -119,10 +133,17 @@ class CellSpec:
                 self.partition_method, self.fault_profile,
                 self.fault_seed)
 
+    def topology_obj(self):
+        """-> ``repro.dist.topology.Topology`` for this cell."""
+        from repro.dist.topology import Topology
+        return Topology.parse(self.topology, self.workers)
+
     def label(self) -> str:
         base = (f"{self.backend}/{self.system}/{self.dataset}"
                 f"/b{self.batch_size}/w{self.workers}/h{self.n_hot}"
                 f"/e{self.epochs}")
+        if self.topology != "flat":
+            base += f"/t{self.topology}"
         if self.fault_profile != "none":
             base += f"/f{self.fault_profile}"
         return base
@@ -174,12 +195,17 @@ def grid(backends: Sequence[str], systems: Sequence[str],
 def fast_grid() -> CampaignSpec:
     """CPU-sized paired grid: rapid vs baseline on BOTH backends over the
     tiny graph, every cell of a scenario sharing schedules exactly, so
-    the host-vs-device differential checks run on every pair."""
+    the host-vs-device differential checks run on every pair. Each
+    device cell additionally re-runs on the hierarchical 2x2 topology
+    (2 emulated hosts x 2 devices), pairing with its flat twin for the
+    cross-topology parity + byte-sum checks."""
     cells = grid(backends=("host", "device"),
                  systems=("rapidgnn", "dgl-metis"),
                  datasets=("tiny",), batch_sizes=(16,), workers=(4,),
                  n_hots=(64,), epochs=3, seed=42, fanouts=(5, 5),
                  partition="greedy")
+    cells += [dataclasses.replace(c, topology="2x2")
+              for c in cells if c.backend == "device"]
     return CampaignSpec(name="fast", cells=tuple(cells))
 
 

@@ -201,6 +201,66 @@ def plan_round_trips(draw):
 
 
 @composite
+def two_tier_cases(draw):
+    """Grouped pull requests on a drawn hierarchical topology:
+    -> (per_group [(ids, pos)...], owner_of, topo, requester, k_flat,
+    k_intra, k_inter). ``requester`` is the flat worker issuing every
+    request; the ``mode`` draw forces all-same-host and all-cross-host
+    request sets often, so each tier's EMPTY degenerate path (intra
+    carrying everything / inter carrying everything) is exercised, not
+    just the mixed case. k bounds are true maxima plus drawn slack."""
+    from repro.dist import Topology
+
+    hosts = draw(st.integers(1, 3))
+    dph = draw(st.integers(1, 3))
+    topo = Topology.hierarchical(hosts, dph)
+    P_ = topo.num_workers
+    n_per = draw(st.integers(4, 16))
+    G = draw(st.integers(1, 5))
+    requester = draw(st.integers(0, P_ - 1))
+    owner_of = np.repeat(np.arange(P_), n_per)
+    mode = draw(st.sampled_from(["mixed", "same_only", "cross_only"]))
+    if hosts == 1 and mode == "cross_only":
+        mode = "same_only"              # one host: everything is local
+    all_ids = np.arange(P_ * n_per)
+    same_pool = all_ids[np.asarray(
+        topo.same_host(owner_of, requester))]
+    cross_pool = np.setdiff1d(all_ids, same_pool)
+    pool = {"mixed": all_ids, "same_only": same_pool,
+            "cross_only": cross_pool}[mode]
+    rng = np.random.default_rng(draw(seeds()))
+    per_group = []
+    k_flat = k_intra = k_inter = 1
+    for _ in range(G):
+        n = int(rng.integers(0, 24))
+        gi = np.where(rng.random(n) < 0.15, -1,
+                      rng.choice(pool, size=n) if pool.size
+                      else np.full(n, -1))
+        gp = rng.integers(0, 64, size=n)
+        if n > 4:                                     # inject exact dupes
+            gi[:2] = gi[2:4]
+            gp[:2] = gp[2:4]
+        valid = gi >= 0
+        if valid.any():
+            uniq = np.unique(np.stack([gi[valid], gp[valid]]), axis=1)
+            own = owner_of[uniq[0]]
+            k_flat = max(k_flat, int(np.bincount(
+                own, minlength=P_).max()))
+            same = np.asarray(topo.same_host(own, requester))
+            if same.any():
+                k_intra = max(k_intra, int(np.bincount(
+                    topo.local_of(own[same]),
+                    minlength=topo.devices_per_host).max()))
+            if (~same).any():
+                k_inter = max(k_inter, int(np.bincount(
+                    own[~same], minlength=P_).max()))
+        per_group.append((gi, gp))
+    slack = int(rng.integers(0, 3))
+    return (per_group, owner_of, topo, requester, k_flat + slack,
+            k_intra + slack, k_inter + slack)
+
+
+@composite
 def pull_request_sets(draw):
     """Grouped pull requests with exact duplicates and -1 padding rows:
     -> (per_group [(ids, pos)...], owner_of, P, k_max). ``k_max`` is

@@ -191,6 +191,32 @@ def test_rpc_equals_miss_set(setup):
         assert em.remote_bytes == em.rpc_count * g.feat_dim * 4
 
 
+def test_all_local_sync_pull_charges_no_phantom_rpc(setup):
+    """Regression: a fully-LOCAL SyncPull batch used to charge one
+    phantom RPC (``n_rpc = max(len(owners), 1)``) and its modelled
+    latency even though no partition was touched; it must charge zero
+    RPCs, zero bytes and zero modelled network time."""
+    g, pg, sampler, ws = setup
+    store = ShardedFeatureStore(pg, worker=0, net=NetworkModel(
+        enabled=True))                       # enabled: latency WOULD show
+    local = pg.local_nodes[0][:8]
+    for critical_path in (False, True):
+        em = EpochMetrics()
+        out = store.sync_pull(local, em, critical_path=critical_path)
+        np.testing.assert_allclose(out, g.features[local])
+        assert em.rpc_count == 0
+        assert em.remote_bytes == 0
+        assert em.modeled_net_time_s == 0.0
+        assert em.sync_net_time_s == 0.0
+        assert em.sync_pull_calls == 1       # the call itself is counted
+    # a batch with remote ids still charges per-partition RPCs
+    remote = pg.local_nodes[1][:4]
+    em = EpochMetrics()
+    store.sync_pull(remote, em)
+    assert em.rpc_count == 4                 # |M_i|, not partitions
+    assert em.modeled_net_time_s > 0.0
+
+
 def test_baseline_fetches_all_remote(setup):
     g, pg, sampler, ws = setup
     store = ShardedFeatureStore(pg, worker=0,

@@ -12,9 +12,9 @@ pytestmark = pytest.mark.slow      # subprocess + 4-device jax init each
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(which: str):
+def _run(which: str, devices: int = 4):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run(
         [sys.executable, os.path.join(ROOT, "tests", "_dist_checks.py"),
@@ -77,6 +77,14 @@ def test_crash_resume_bit_parity():
     curve bit-for-bit; crash inside the checkpoint commit leaves LATEST
     on the previous complete step."""
     assert "crash_resume OK" in _run("crashresume")
+
+
+def test_topology_two_tier_8dev():
+    """Hierarchical 2 hosts x 4 devices (8 emulated devices): two-tier
+    runner keeps one XLA trace, loss curves bit-equal to the flat mesh,
+    intra + inter lanes sum to the flat counts with both tiers live,
+    host parity holds."""
+    assert "topology_two_tier OK" in _run("topology", devices=8)
 
 
 def test_moe_expert_parallel_matches_single_device():

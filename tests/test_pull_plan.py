@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from _hyp import ALL_HEALTH_CHECKS, given, settings
-from strategies import plan_round_trips
-from repro.dist import build_pull_plan
+from strategies import plan_round_trips, two_tier_cases
+from repro.dist import (build_pull_plan, pack_pull_lanes,
+                        pack_pull_lanes_two_tier)
 from repro.dist.gnn_step import DeviceView
 from repro.graph import load_dataset, partition_graph
 
@@ -135,6 +136,87 @@ def test_pack_pull_lanes_big_base_stays_on_fast_path(monkeypatch):
             np.testing.assert_array_equal(
                 spos[gid, p][lane],
                 pos[want][order].astype(np.int32))
+
+
+def test_negative_owner_raises_not_crashes():
+    """Regression: an out-of-range owner (e.g. a corrupted owner map
+    handing an id to worker -1) used to crash inside ``np.bincount``
+    with an opaque numpy error; build_pull_plan must validate owners
+    explicitly with the same message ``pack_pull_lanes`` uses."""
+    owner = np.array([0, 0, -1, 1], np.int64)     # id 2 owned by "-1"
+    ids = np.array([2], np.int32)
+    pos = np.array([0], np.int32)
+    with pytest.raises(ValueError, match="owner id out of range"):
+        build_pull_plan(ids, pos, owner, 2, k_max=4)
+    with pytest.raises(ValueError, match="owner id out of range"):
+        build_pull_plan(np.array([3], np.int32), pos,
+                        np.array([0, 0, 0, 7], np.int64), 2, k_max=4)
+    # negative IDS are padding and still fine (dropped before validation)
+    plan = build_pull_plan(np.array([-1], np.int32), pos, owner, 2,
+                           k_max=4)
+    assert int(plan.counts.sum()) == 0
+
+
+def test_request_bytes_accounts_id_leg():
+    """Satellite bugfix: the (P, k_max) int32 id matrix the request leg
+    ships was never accounted; request_bytes covers it."""
+    owner = np.repeat(np.arange(2), 8)
+    ids = np.array([3, 12], np.int32)
+    pos = np.array([0, 1], np.int32)
+    plan = build_pull_plan(ids, pos, owner, 2, k_max=4)
+    assert plan.request_bytes() == 2 * 4 * 4      # P * k_max * itemsize
+    assert plan.request_bytes() == plan.send_ids.size * 4
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=ALL_HEALTH_CHECKS)
+@given(two_tier_cases())
+def test_two_tier_union_bit_equal_to_flat(case):
+    """Two-tier parity property (DESIGN.md §6.7): for ANY drawn
+    topology, requester and request mix -- including the all-same-host
+    and all-cross-host degenerate draws where one tier is empty -- the
+    union of the intra and inter lane sets is bit-equal to the flat
+    ``pack_pull_lanes`` packing: every (group, owner) bucket lands in
+    exactly one tier, with identical ascending (id, pos) lanes."""
+    per_group, owner_of, topo, requester, k_flat, k_i, k_x = case
+    G = len(per_group)
+    P_, D = topo.num_workers, topo.devices_per_host
+    ids = np.concatenate([gi for gi, _ in per_group]) \
+        if per_group else np.zeros(0, np.int64)
+    pos = np.concatenate([gp for _, gp in per_group]) \
+        if per_group else np.zeros(0, np.int64)
+    group = np.concatenate([np.full(len(gi), g)
+                            for g, (gi, _) in enumerate(per_group)])
+    owner = owner_of[np.maximum(ids, 0)]          # -1 ids: dropped anyway
+    req = np.full(ids.shape, requester)
+
+    flat = pack_pull_lanes(ids, pos, group, owner, G, P_, k_flat)
+    intra, inter = pack_pull_lanes_two_tier(
+        ids, pos, group, owner, req, G, topo, k_i, k_x)
+
+    f_ids, f_pos, f_mask, f_cnt = flat
+    i_ids, i_pos, i_mask, i_cnt = intra
+    x_ids, x_pos, x_mask, x_cnt = inter
+    assert i_ids.shape == (G, D, k_i)
+    assert x_ids.shape == (G, P_, k_x)
+    # the tiers partition the flat lane total exactly
+    assert int(i_cnt.sum()) + int(x_cnt.sum()) == int(f_cnt.sum())
+    host_r = topo.host_of(requester)
+    for g in range(G):
+        for o in range(P_):
+            lane = f_mask[g, o]
+            if topo.host_of(o) == host_r:
+                tid = i_ids[g, topo.local_of(o)][i_mask[g,
+                                                        topo.local_of(o)]]
+                tpo = i_pos[g, topo.local_of(o)][i_mask[g,
+                                                        topo.local_of(o)]]
+                # same-host owners never appear on the DCN tier
+                assert int(x_cnt[g, o]) == 0
+            else:
+                tid = x_ids[g, o][x_mask[g, o]]
+                tpo = x_pos[g, o][x_mask[g, o]]
+            np.testing.assert_array_equal(tid, f_ids[g, o][lane])
+            np.testing.assert_array_equal(tpo, f_pos[g, o][lane])
 
 
 def test_device_view_round_trip():
