@@ -187,6 +187,18 @@ def main() -> None:
 
     _section("fault_recovery", _fault_recovery,
              lambda rows: rows[-1] if rows else "-")
+
+    def _serve():
+        """Online-serving latency lanes (DESIGN.md §11): clean vs
+        fault-injected Poisson streams; writes BENCH_serve.json and
+        raises (-> ``recovery FAILED`` in the log, CI greps for it)
+        when the fault-lane p99 exceeds 5x the clean lane's."""
+        from benchmarks import serve_latency
+
+        return serve_latency.run(requests=64 if args.full else 32)
+
+    _section("serve_latency", _serve,
+             lambda rows: rows[-1] if rows else "-")
     if not args.skip_roofline:
         from benchmarks import roofline
 

@@ -1,0 +1,167 @@
+"""Online-serving latency bench: p50/p99 under Poisson load, clean vs
+fault-injected lanes (ISSUE 10 / DESIGN.md §11).
+
+Each lane runs the SAME Philox-keyed request stream against a fresh
+``GNNInferenceService`` sharing one pre-compiled ``ServeProgram`` (the
+compile is paid once in warmup, so lane latencies are steady-state and
+the one-trace contract holds sweep-wide). Fault lanes activate a named
+profile from ``repro.fault.plan``:
+
+  * ``serve-pull-flaky`` -- every residual sync pull fails once, then
+    the retry recovers (measures the retry-backoff latency tax).
+  * ``serve-warm-stale`` -- warm generation 2 dies forever, pinning the
+    warmer unhealthy; requests degrade to the stale last-good snapshot
+    (measures the stale tier, which must NOT be slower than fresh).
+
+The gate: worst fault-lane p99 must stay within 5x of the clean lane's
+p99 -- degrade gracefully, don't cliff. Emits
+``artifacts/BENCH_serve.json`` (schema ``rapidgnn.bench_serve/v1``) and
+CSV rows for ``benchmarks.run``; raises (-> section FAILED + a
+``recovery FAILED`` line CI greps for) when the bound breaks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HEADER = ("lane,fault_profile,requests,served,shed,errors,"
+          "p50_ms,p99_ms,stale,pull_retries")
+
+#: fault lanes: (lane label, PROFILES name)
+FAULT_LANES = (("pull_flaky", "serve-pull-flaky"),
+               ("warm_stale", "serve-warm-stale"))
+RATIO_BOUND = 5.0
+
+
+def _build(seed: int):
+    import jax
+
+    from repro.graph import KHopSampler, load_dataset, partition_graph
+    from repro.models import GNNConfig, init_params
+
+    g = load_dataset("tiny", seed=seed)
+    pg = partition_graph(g, 4, "greedy")
+    sampler = KHopSampler(g, fanouts=[5, 5], batch_size=8)
+    cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=32,
+                    num_classes=g.num_classes, num_layers=2)
+    params = init_params(cfg, jax.random.key(seed))
+    return g, pg, sampler, cfg, params
+
+
+def _service(built, program, seed: int):
+    from repro.serve.gnn import GNNInferenceService
+
+    g, pg, sampler, cfg, params = built
+    return GNNInferenceService(
+        pg, sampler, cfg, params, s0=seed, worker=0, n_hot=64,
+        max_batch_requests=4, high_water=256, default_timeout_s=30.0,
+        program=program)
+
+
+def _lane(built, program, lane: str, profile: Optional[str],
+          streams, gaps, seed: int) -> Dict:
+    from repro.fault.inject import active_plan
+    from repro.fault.plan import plan_from_profile
+    from repro.serve.gnn import Overloaded
+
+    plan = plan_from_profile(profile, seed=seed) if profile else None
+    svc = _service(built, program, seed).start()
+    try:
+        pendings, shed = [], 0
+        with active_plan(plan):
+            for gap, seeds in zip(gaps, streams):
+                time.sleep(float(gap))
+                try:
+                    pendings.append(svc.submit(seeds))
+                except Overloaded:
+                    shed += 1
+            lat, errors = [], 0
+            for p in pendings:
+                try:
+                    lat.append(p.result(timeout=30.0).latency_s)
+                except Exception:
+                    errors += 1
+        health = svc.health()
+    finally:
+        svc.close()
+    lat_ms = np.asarray(lat) * 1e3
+    return {
+        "lane": lane,
+        "fault_profile": profile or "none",
+        "requests": len(streams),
+        "served": len(lat),
+        "shed": shed,
+        "errors": errors,
+        "latency_ms": {
+            "p50": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99": round(float(np.percentile(lat_ms, 99)), 3),
+            "mean": round(float(lat_ms.mean()), 3),
+        },
+        "health": health,
+    }
+
+
+def run(requests: int = 32, rate: float = 400.0,
+        seed: int = 0) -> List[str]:
+    from repro.eval.report import (build_serve_report,
+                                   validate_serve_report, write_report)
+    from repro.graph.sampler import rng_from
+
+    built = _build(seed)
+    g = built[0]
+    rng = rng_from(seed, 0xBE5E)        # bench serve arrival stream
+    gaps = rng.exponential(1.0 / rate, size=requests)
+    streams = [rng.integers(0, g.num_nodes, size=int(n))
+               for n in rng.integers(1, 9, size=requests)]
+
+    # pay the XLA compile once, outside every lane's clock
+    warm = _service(built, None, seed)
+    warm.oracle(streams[0], rid=0)
+    program = warm.program
+    warm.close()
+
+    lanes = [_lane(built, program, "clean", None, streams, gaps, seed)]
+    for label, profile in FAULT_LANES:
+        lanes.append(_lane(built, program, label, profile, streams,
+                           gaps, seed))
+
+    config = {"dataset": "tiny", "parts": 4, "fanouts": [5, 5],
+              "batch_size": 8, "requests": requests, "rate": rate,
+              "seed": seed}
+    report = build_serve_report(config, lanes, ratio_bound=RATIO_BOUND)
+    probs = validate_serve_report(report)
+    if probs:
+        raise RuntimeError("BENCH_serve schema: " + "; ".join(probs))
+    art = os.path.join(ROOT, "artifacts")
+    write_report(report, os.path.join(art, "BENCH_serve.json"))
+
+    rows = [HEADER]
+    for r in lanes:
+        h = r["health"]
+        rows.append(f"{r['lane']},{r['fault_profile']},{r['requests']},"
+                    f"{r['served']},{r['shed']},{r['errors']},"
+                    f"{r['latency_ms']['p50']},{r['latency_ms']['p99']},"
+                    f"{h['served_stale']},{h['pull_retries']}")
+    rows.append(f"summary,p99_ratio,{report['p99_ratio']},"
+                f"bound,{RATIO_BOUND},"
+                f"{'OK' if report['ok'] else 'BAD'},,,,")
+    if not report["ok"]:
+        raise RuntimeError(
+            f"recovery FAILED: serve fault-lane p99 ratio "
+            f"{report['p99_ratio']} exceeds {RATIO_BOUND}x clean")
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

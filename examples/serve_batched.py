@@ -1,6 +1,8 @@
-"""Batched serving demo: greedy decode on any assigned architecture's
-reduced config, exercising the KV-cache / ring-buffer / recurrent decode
-paths (deliverable b, serving flavor).
+"""Batched transformer-decode demo: greedy decode on any assigned
+architecture's reduced config, exercising the KV-cache / ring-buffer /
+recurrent decode paths. For the repo's GNN serving path (admission
+queue, hot-cache assembly, degradation tiers) see
+``python -m repro.launch.serve_gnn``.
 
   PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-9b
 """
@@ -11,4 +13,4 @@ if __name__ == "__main__":
     args = sys.argv[1:] or ["--arch", "recurrentgemma-9b", "--batch", "4",
                             "--prompt-len", "8", "--gen", "24"]
     raise SystemExit(subprocess.call(
-        [sys.executable, "-m", "repro.launch.serve"] + args))
+        [sys.executable, "-m", "repro.launch.serve_decode"] + args))

@@ -14,6 +14,7 @@ Paper mapping:
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 import numpy as np
@@ -40,6 +41,13 @@ class ShardedFeatureStore:
         self.feat = pg.graph.features     # authoritative global table
         self.d = pg.graph.feat_dim
         self.itemsize = self.feat.itemsize
+        # metrics accumulation is lock-guarded: the serving path issues
+        # concurrent sync_pulls against ONE store, and `m.x += v` on a
+        # dataclass attribute is a read-modify-write race that would
+        # break the `bytes == sum(n_remote) * row` differential
+        # identity. Callers sharing one EpochMetrics across *stores*
+        # must still coordinate externally (the runners never do).
+        self._m_lock = threading.Lock()
 
     def _remote_mask(self, ids: np.ndarray) -> np.ndarray:
         return self.pg.owner[ids] != self.worker
@@ -47,10 +55,11 @@ class ShardedFeatureStore:
     # -- bulk cache build (one vectorized RPC; paper Alg. 1 line 4) --------
     def vector_pull(self, ids: np.ndarray, m: EpochMetrics) -> np.ndarray:
         nbytes = int(ids.shape[0]) * self.d * self.itemsize
-        m.vector_pull_bytes += nbytes
         # ONE batched request: the per-node marshalling tax is paid once
-        m.modeled_net_time_s += self.net.transfer_time(nbytes, n_rpc=1,
-                                                       n_nodes=1)
+        t = self.net.transfer_time(nbytes, n_rpc=1, n_nodes=1)
+        with self._m_lock:
+            m.vector_pull_bytes += nbytes
+            m.modeled_net_time_s += t
         # bulk pull is off the critical path (built concurrently) -> no sleep
         return self.feat[ids].copy()
 
@@ -61,7 +70,8 @@ class ShardedFeatureStore:
         # must not inflate rpc_count/remote_bytes (the bytes_identity
         # differential check counts successful transfers only)
         def _on_retry(_a: int) -> None:
-            m.pull_retries += 1
+            with self._m_lock:
+                m.pull_retries += 1
         retry_call(lambda a: fault_point("pull", attempt=a,
                                          epoch=m.epoch,
                                          worker=self.worker),
@@ -76,15 +86,18 @@ class ShardedFeatureStore:
         # ``max(len(owners), 1)`` floor modelled a phantom RPC there)
         owners = np.unique(self.pg.owner[ids[remote]]) if n_remote else []
         n_rpc = len(owners)
-        m.rpc_count += n_remote          # paper's rpc_e += |M_i|
-        m.sync_pull_calls += 1
-        m.remote_bytes += nbytes
+        # the critical-path charge SLEEPS for t_net -- keep it outside
+        # the metrics lock or one slow pull serializes every other caller
         t = (self.net.charge(nbytes, n_rpc=n_rpc, n_nodes=n_remote)
              if critical_path
              else self.net.transfer_time(nbytes, n_rpc=n_rpc,
                                          n_nodes=n_remote))
-        m.modeled_net_time_s += t
-        m.sync_net_time_s += t
+        with self._m_lock:
+            m.rpc_count += n_remote      # paper's rpc_e += |M_i|
+            m.sync_pull_calls += 1
+            m.remote_bytes += nbytes
+            m.modeled_net_time_s += t
+            m.sync_net_time_s += t
         return self.feat[ids].copy()
 
     # -- local reads are free -----------------------------------------------

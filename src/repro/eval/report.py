@@ -38,6 +38,8 @@ from repro.eval.differential import CheckResult, all_pass
 SCHEMA = "rapidgnn.bench_paper/v2"
 #: BENCH_fault.json: the fault campaign's recovery scorecard.
 FAULT_SCHEMA = "rapidgnn.bench_fault/v1"
+#: BENCH_serve.json: online-serving latency under clean vs fault lanes.
+SERVE_SCHEMA = "rapidgnn.bench_serve/v1"
 
 #: the paper's headline claims, pinned so readers of the artifact can
 #: compare without the PDF (ranges are across its dataset grid).
@@ -225,6 +227,74 @@ def validate_fault_report(report: Dict) -> List[str]:
         if chk.get("status") not in ("PASS", "FAIL", "SKIP"):
             probs.append(f"differential[{i}] bad status "
                          f"{chk.get('status')!r}")
+    return probs
+
+
+_REQUIRED_LANE_FIELDS = (
+    "lane", "fault_profile", "requests", "served", "shed", "errors",
+    "latency_ms", "health")
+
+
+def build_serve_report(config: Dict, lanes: Sequence[Dict],
+                       ratio_bound: float = 5.0) -> Dict:
+    """BENCH_serve.json: p50/p99 serving latency per lane (clean vs
+    fault-injected) plus the degradation-bound verdict. The fault lane
+    may shed or degrade, but its p99 must stay within ``ratio_bound``x
+    of the clean lane's -- the serving tier's 'graceful, not cliff'
+    contract (DESIGN.md §11)."""
+    clean = [r for r in lanes if r["fault_profile"] == "none"]
+    fault = [r for r in lanes if r["fault_profile"] != "none"]
+    clean_p99 = min(r["latency_ms"]["p99"] for r in clean)
+    worst_p99 = max(r["latency_ms"]["p99"] for r in fault)
+    ratio = worst_p99 / max(clean_p99, 1e-9)
+    return {
+        "schema": SERVE_SCHEMA,
+        "created_unix": time.time(),
+        "config": dict(config),
+        "lanes": [dict(r) for r in lanes],
+        "p99_ratio": round(ratio, 3),
+        "ratio_bound": ratio_bound,
+        "ok": bool(ratio <= ratio_bound),
+    }
+
+
+def validate_serve_report(report: Dict) -> List[str]:
+    """Schema check for BENCH_serve.json. Beyond shape, enforces the
+    bench's reason to exist: a clean lane AND at least one faulted lane
+    that actually served traffic, every lane on a single XLA trace, and
+    an ``ok`` verdict consistent with the recorded ratio."""
+    probs: List[str] = []
+    for key in ("schema", "config", "lanes", "p99_ratio", "ratio_bound",
+                "ok"):
+        if key not in report:
+            probs.append(f"missing top-level key {key!r}")
+    if probs:
+        return probs
+    if report["schema"] != SERVE_SCHEMA:
+        probs.append(f"schema {report['schema']!r} != {SERVE_SCHEMA!r}")
+    for i, lane in enumerate(report["lanes"]):
+        for f in _REQUIRED_LANE_FIELDS:
+            if f not in lane:
+                probs.append(f"lanes[{i}] missing {f!r}")
+        lat = lane.get("latency_ms", {})
+        for f in ("p50", "p99", "mean"):
+            if f not in lat:
+                probs.append(f"lanes[{i}].latency_ms missing {f!r}")
+        if {"p50", "p99"} <= set(lat) and lat["p50"] > lat["p99"]:
+            probs.append(f"lanes[{i}] p50 > p99")
+        if lane.get("served", 0) <= 0:
+            probs.append(f"lanes[{i}] served no requests")
+        if lane.get("health", {}).get("trace_count") != 1:
+            probs.append(f"lanes[{i}] trace_count != 1 -- the static "
+                         "collation contract broke (retrace)")
+    lanes = report["lanes"]
+    if not any(r.get("fault_profile") == "none" for r in lanes):
+        probs.append("no clean lane")
+    if not any(r.get("fault_profile", "none") != "none" for r in lanes):
+        probs.append("no fault lane -- the bench must exercise serving "
+                     "under an active fault plan")
+    if report["ok"] != (report["p99_ratio"] <= report["ratio_bound"]):
+        probs.append("ok verdict inconsistent with p99_ratio vs bound")
     return probs
 
 

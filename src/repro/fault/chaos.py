@@ -1,4 +1,5 @@
-"""Chaos harness: sweep seeded fault plans through the host-sim runner.
+"""Chaos harness: sweep seeded fault plans through the host-sim runner
+AND the online serving tier.
 
 ``python -m repro.fault.chaos --seed N`` runs the tiny-graph RapidGNN
 scenario (worker 0 of a 4-way greedy partition, 3 epochs, disk spill ON
@@ -16,6 +17,16 @@ A final checkpoint-atomicity drill crashes ``save_run_state`` between
 the arrays commit and the manifest commit and proves ``LATEST`` still
 resolves to the previous, bit-intact checkpoint.
 
+The SERVE sweep (DESIGN.md §11) then drills ``repro.serve.gnn``: a
+fixed request stream is replayed through a fresh service per plan
+(``SERVE_SWEEP`` profiles + ``random_serve_plan`` draws), all sharing
+ONE jitted program. Per request the contract is ternary: the response
+is bit-equal to the clean single-request oracle (stale responses must
+ALSO bit-match their snapshot rows against the authoritative table), or
+the request was shed/failed with a TYPED serving error. Anything else
+-- divergence, an untyped leak, a snapshot that lies -- fails the run,
+and ``trace_count`` must stay 1 across the whole sweep.
+
 Any violation prints a ``recovery FAILED`` line (CI greps for it) and
 the CLI exits non-zero. Fault plans are Philox-keyed from the CLI seed
 (§2.2 RNG contract), so every sweep replays bit-exactly.
@@ -31,7 +42,8 @@ import numpy as np
 
 from repro.fault.inject import active_plan
 from repro.fault.plan import (FaultPlan, InjectedCrash, InjectedFault,
-                              plan_from_profile, random_plan)
+                              plan_from_profile, random_plan,
+                              random_serve_plan)
 
 #: named host-side profiles the sweep always covers (chaos adds random
 #: plans on top). ``ckpt-crash``/``run-crash`` are exercised by the
@@ -39,6 +51,11 @@ from repro.fault.plan import (FaultPlan, InjectedCrash, InjectedFault,
 HOST_SWEEP = ("pull-flaky", "pull-dead", "prefetch-flaky",
               "prefetch-fatal", "prefetch-hang", "csec-loss",
               "spill-rot", "spill-trunc", "spill-gone")
+
+#: named serving profiles the serve sweep always covers.
+SERVE_SWEEP = ("serve-pull-flaky", "serve-pull-dead", "serve-warm-flaky",
+               "serve-warm-dead", "serve-warm-hang", "serve-warm-stale",
+               "serve-queue-shed")
 
 #: the ONLY exceptions a faulted run may surface: the fault-plane's own
 #: errors plus the typed detection/supervision errors of each site.
@@ -105,6 +122,173 @@ class _Chaos:
         return np.asarray(losses, np.float64)
 
 
+def _allowed_serve_errors() -> tuple:
+    from repro.serve.gnn import (Overloaded, ServeClosed, ServePullError,
+                                 WarmerError)
+    return (InjectedFault, Overloaded, ServePullError, WarmerError,
+            ServeClosed, TimeoutError)
+
+
+class _ServeChaos:
+    """One shared serving scenario: a fixed Philox-keyed request stream
+    replayed through a FRESH service per plan (fresh queue -> rid j ==
+    stream index j, so oracles key by stream position), with one shared
+    jitted ``ServeProgram`` across every run.
+
+    Shape: three 4-request phases with a synchronous warm cycle between
+    them, so each plan exercises the full tier ladder -- phase A runs
+    uncached, B runs against generation 1, C against generation 2 (or
+    degraded stale/uncached when a warm was killed)."""
+
+    N_PHASES = 3
+    PHASE_REQS = 4
+
+    def __init__(self):
+        from repro.graph import KHopSampler, load_dataset, partition_graph
+        from repro.graph.sampler import rng_from
+        from repro.models import GNNConfig, init_params
+        import jax
+
+        self.g = load_dataset("tiny")
+        self.pg = partition_graph(self.g, 4, "greedy")
+        self.sampler = KHopSampler(self.g, fanouts=[5, 5], batch_size=8)
+        self.cfg = GNNConfig(kind="sage", in_dim=self.g.feat_dim,
+                             hidden_dim=32,
+                             num_classes=self.g.num_classes,
+                             num_layers=2)
+        self.params = init_params(self.cfg, jax.random.key(42))
+        n = self.N_PHASES * self.PHASE_REQS
+        self.streams = [
+            rng_from(4242, j).integers(0, self.g.num_nodes,
+                                       size=1 + j % 8).astype(np.int64)
+            for j in range(n)]
+        self.program = None       # built by the first service
+
+    def _make_service(self):
+        from repro.serve.gnn import GNNInferenceService
+        svc = GNNInferenceService(
+            self.pg, self.sampler, self.cfg, self.params, s0=42,
+            worker=0, n_hot=64,
+            max_batch_requests=self.PHASE_REQS,
+            high_water=self.PHASE_REQS,
+            default_timeout_s=30.0, program=self.program)
+        self.program = svc.program
+        return svc
+
+    def oracles(self) -> List[np.ndarray]:
+        svc = self._make_service()
+        try:
+            return [svc.oracle(s, rid=j)
+                    for j, s in enumerate(self.streams)]
+        finally:
+            svc.close()
+
+    def run(self, plan: FaultPlan, oracles: List[np.ndarray]) -> Dict:
+        """Replay the stream under ``plan``; -> per-run summary with
+        ``failures`` naming every contract breach."""
+        from repro.serve.gnn import WarmerError
+        allowed = _allowed_serve_errors()
+        svc = self._make_service()
+        counts = {"ok": 0, "shed": 0, "typed": 0, "stale": 0}
+        failures: List[str] = []
+        try:
+            with active_plan(plan):
+                for phase in range(self.N_PHASES):
+                    lo = phase * self.PHASE_REQS
+                    pending = {}
+                    for j in range(lo, lo + self.PHASE_REQS):
+                        try:
+                            pending[j] = svc.submit(self.streams[j])
+                        except allowed:
+                            counts["shed"] += 1
+                    try:
+                        served = 0
+                        while served < len(pending):
+                            served += svc.step(timeout=0.1)
+                    except allowed:
+                        pass      # per-request errors re-checked below
+                    for j, p in pending.items():
+                        try:
+                            resp = p.result(timeout=1.0)
+                        except allowed:
+                            counts["typed"] += 1
+                            continue
+                        except BaseException as exc:
+                            failures.append(
+                                f"req {j}: untyped "
+                                f"{type(exc).__name__}")
+                            continue
+                        err = self._verify(j, resp, oracles)
+                        if err:
+                            failures.append(err)
+                        else:
+                            counts["ok"] += 1
+                            counts["stale"] += int(resp.stale)
+                    if phase < self.N_PHASES - 1:
+                        try:
+                            svc.warmer.warm_now()
+                        except WarmerError:
+                            pass  # degrade: stale/uncached tier next
+        except BaseException as exc:
+            failures.append(f"sweep leaked {type(exc).__name__}: {exc}")
+        finally:
+            svc.close()
+        counts["health"] = svc.health()
+        counts["failures"] = failures
+        return counts
+
+    def _verify(self, j: int, resp, oracles) -> Optional[str]:
+        if not np.array_equal(resp.logits, oracles[j]):
+            return (f"req {j}: tier={resp.tier} logits diverge from the "
+                    f"clean oracle")
+        if resp.stale:
+            c = resp.served_cache
+            if c is None:
+                return f"req {j}: stale response without a snapshot"
+            if not np.array_equal(c.feats, self.g.features[c.ids]):
+                return (f"req {j}: stale snapshot rows diverge from the "
+                        f"authoritative table")
+        return None
+
+
+def _serve_sweep(seed: int, fast: bool, log: Callable[[str], None],
+                 n_random: Optional[int] = None) -> Dict:
+    sc = _ServeChaos()
+    oracles = sc.oracles()
+    log(f"[chaos] serve oracle: {len(oracles)} requests")
+    if n_random is None:
+        n_random = 2 if fast else 6
+    plans = [plan_from_profile(p, seed=seed) for p in SERVE_SWEEP]
+    plans += [random_serve_plan(seed, i) for i in range(n_random)]
+    runs: List[Dict] = []
+    bad: List[str] = []
+    for plan in plans:
+        out = sc.run(plan, oracles)
+        for f in out["failures"]:
+            log(f"recovery FAILED: serve plan {plan.name}: {f}")
+        if out["failures"]:
+            bad.append(plan.name)
+        if plan.name == "serve-warm-stale" and out["stale"] == 0:
+            bad.append(plan.name)
+            log("recovery FAILED: serve plan serve-warm-stale never "
+                "exercised the stale tier")
+        fires = plan.total_fires()
+        runs.append({"plan": plan.name, "fires": fires,
+                     "ok": out["ok"], "shed": out["shed"],
+                     "typed": out["typed"], "stale": out["stale"],
+                     "snapshot": plan.snapshot()})
+        log(f"[chaos] {plan.name:18s} fires={fires:2d} "
+            f"ok={out['ok']:2d} shed={out['shed']} typed={out['typed']} "
+            f"stale={out['stale']}")
+    traces = sc.program.trace_count if sc.program else 0
+    if traces != 1:
+        bad.append("trace-count")
+        log(f"recovery FAILED: serve sweep compiled {traces} XLA traces "
+            f"(static-shape collation guarantees exactly 1)")
+    return {"runs": runs, "failed_plans": bad, "trace_count": traces,
+            "ok": not bad}
+
+
 def _checkpoint_drill(log: Callable[[str], None]) -> bool:
     """Crash ``save_run_state`` between arrays and manifest commits:
     ``LATEST`` must keep naming the previous step, which must load back
@@ -139,10 +323,19 @@ def _checkpoint_drill(log: Callable[[str], None]) -> bool:
 
 def run_chaos(seed: int = 0, fast: bool = False,
               n_random: Optional[int] = None,
-              log: Callable[[str], None] = print) -> Dict:
+              log: Callable[[str], None] = print,
+              serve_only: bool = False) -> Dict:
     """Run the full sweep; returns a JSON-ready summary with
     ``ok=True`` iff every run either recovered bit-exactly or raised a
-    typed error, and the checkpoint drill passed."""
+    typed error, and the checkpoint drill passed. ``serve_only`` runs
+    just the serving sweep (the CI fast-lane serve chaos step)."""
+    if serve_only:
+        serve = _serve_sweep(seed, fast, log, n_random=n_random)
+        log(f"[chaos] {len(serve['runs'])} serve plans, "
+            f"{len(serve['failed_plans'])} failures")
+        return {"seed": seed, "runs": [], "checkpoint_drill": None,
+                "failed_plans": serve["failed_plans"], "serve": serve,
+                "ok": serve["ok"]}
     ch = _Chaos()
     oracle = ch.run(None)
     log(f"[chaos] oracle: {oracle.shape[0]} steps, "
@@ -182,12 +375,15 @@ def run_chaos(seed: int = 0, fast: bool = False,
         log(f"[chaos] {plan.name:18s} fires={fires:2d} {outcome}")
 
     ckpt_ok = _checkpoint_drill(log)
-    ok = not bad and ckpt_ok
-    log(f"[chaos] {len(runs)} plans, {len(bad)} failures, "
+    serve = _serve_sweep(seed, fast, log)
+    ok = not bad and ckpt_ok and serve["ok"]
+    log(f"[chaos] {len(runs)} train plans ({len(bad)} failures), "
+        f"{len(serve['runs'])} serve plans "
+        f"({len(serve['failed_plans'])} failures), "
         f"checkpoint drill {'OK' if ckpt_ok else 'FAILED'}")
     return {"seed": seed, "oracle_steps": int(oracle.shape[0]),
             "runs": runs, "checkpoint_drill": ckpt_ok,
-            "failed_plans": bad, "ok": ok}
+            "failed_plans": bad, "serve": serve, "ok": ok}
 
 
 def main(argv=None) -> int:
@@ -199,8 +395,11 @@ def main(argv=None) -> int:
                     help="2 random plans instead of 8")
     ap.add_argument("--plans", type=int, default=None,
                     help="override the random-plan count")
+    ap.add_argument("--serve-only", action="store_true",
+                    help="run only the serving sweep (CI fast lane)")
     args = ap.parse_args(argv)
-    out = run_chaos(seed=args.seed, fast=args.fast, n_random=args.plans)
+    out = run_chaos(seed=args.seed, fast=args.fast, n_random=args.plans,
+                    serve_only=args.serve_only)
     return 0 if out["ok"] else 1
 
 

@@ -37,6 +37,10 @@ SITES = {
     "pull": "core/fetch.py sync_pull",
     "checkpoint": "train/checkpoint.py save commit point",
     "run_crash": "dist/runner.py epoch boundary after checkpoint",
+    # -- online serving sites (repro.serve.gnn, DESIGN.md §11) -------------
+    "serve_pull": "serve/gnn/service.py residual sync-pull per micro-batch",
+    "serve_warm": "serve/gnn/warmer.py hot-cache warm cycle",
+    "serve_queue": "serve/gnn/admission.py request admission",
 }
 
 #: kinds that damage a file operand instead of raising
@@ -189,6 +193,24 @@ PROFILES: Dict[str, Tuple[FaultRule, ...]] = {
     "spill-rot": (FaultRule("spill_write", "corrupt", epochs=(1,)),),
     "spill-trunc": (FaultRule("spill_write", "truncate", epochs=(1,)),),
     "spill-gone": (FaultRule("spill_write", "drop", epochs=(1,)),),
+    # -- online serving sites (repro.serve.gnn) -----------------------------
+    # serve probes carry the request id in ``index`` and the warm
+    # generation in ``epoch``, so rules can target specific requests /
+    # warm cycles. Transient pull faults clear under the service's
+    # retry budget; "dead" variants exhaust it (typed ServePullError /
+    # stale-tier degradation).
+    "serve-pull-flaky": (FaultRule("serve_pull", "error"),),
+    "serve-pull-dead": (FaultRule("serve_pull", "error", indices=(1,),
+                                  max_attempt=99),),
+    "serve-warm-flaky": (FaultRule("serve_warm", "error"),),
+    "serve-warm-dead": (FaultRule("serve_warm", "error", max_attempt=99),),
+    "serve-warm-hang": (FaultRule("serve_warm", "hang", delay_s=0.05),),
+    # persistent failure of warm GENERATION 2 only: generation 1
+    # succeeds, so the service holds a last-good snapshot and must
+    # degrade to the STALE tier (flagged responses) rather than fail
+    "serve-warm-stale": (FaultRule("serve_warm", "error", epochs=(2,),
+                                   max_attempt=99),),
+    "serve-queue-shed": (FaultRule("serve_queue", "error", p=0.5),),
 }
 
 
@@ -229,3 +251,36 @@ def random_plan(seed: int, i: int, num_epochs: int = 3) -> FaultPlan:
             max_attempt=int(rng.integers(0, 2)),
             delay_s=0.15))
     return FaultPlan(seed, rules, name=f"chaos-{i}")
+
+
+#: (site, kind) pool for the SERVING chaos sweep. Kept SEPARATE from
+#: the training ``CHAOS_POOL`` on purpose: mixing serve sites into the
+#: training pool would dilute both sweeps' fault density, and a
+#: training run never reaches a serve site (nor vice versa), so a
+#: mixed plan wastes half its rules. "hang" doubles as the
+#: deadline-pressure generator.
+SERVE_CHAOS_POOL: Tuple[Tuple[str, str], ...] = (
+    ("serve_pull", "error"),
+    ("serve_warm", "error"),
+    ("serve_warm", "hang"),
+    ("serve_queue", "error"),
+)
+
+
+def random_serve_plan(seed: int, i: int) -> FaultPlan:
+    """Serving chaos plan #i: 1-3 rules from ``SERVE_CHAOS_POOL`` on an
+    independent keyed stream (tag differs from ``random_plan``, so the
+    two sweeps never correlate). Probability and transience vary; no
+    epoch predicate -- serve probes carry the warm generation there,
+    which the drawn plan should hit regardless of its value."""
+    rng = rng_from(seed, FAULT_SALT, _tag("serve-chaos-plan"), i)
+    rules = []
+    for _ in range(int(rng.integers(1, 4))):
+        site, kind = SERVE_CHAOS_POOL[
+            int(rng.integers(0, len(SERVE_CHAOS_POOL)))]
+        rules.append(FaultRule(
+            site, kind,
+            p=(0.5, 1.0)[int(rng.integers(0, 2))],
+            max_attempt=int(rng.integers(0, 2)),
+            delay_s=0.02))
+    return FaultPlan(seed, rules, name=f"serve-chaos-{i}")

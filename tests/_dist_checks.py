@@ -550,6 +550,58 @@ def check_topology_two_tier():
     print("topology_two_tier OK")
 
 
+def check_serve_gnn():
+    """Serving lane on 4 emulated devices: one service per worker over
+    the SAME partitioned graph, each serving the same request streams.
+    Per-worker responses must be bit-equal to that worker's own oracle
+    through the tier ladder (uncached -> fresh), and a flaky-pull plan
+    must recover bit-equal -- worker-keyed Philox streams mean workers
+    sample DIFFERENT subgraphs, so cross-worker equality is not
+    expected and not asserted."""
+    from repro.fault import active_plan, plan_from_profile
+    from repro.graph import load_dataset, partition_graph, KHopSampler
+    from repro.graph.sampler import rng_from
+    from repro.models import GNNConfig, init_params
+    from repro.serve.gnn import GNNInferenceService
+
+    assert jax.device_count() == 4
+    g = load_dataset("tiny", seed=0)
+    pg = partition_graph(g, 4, "greedy")
+    sampler = KHopSampler(g, fanouts=[3, 3], batch_size=4)
+    cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=16,
+                    num_classes=g.num_classes, num_layers=2)
+    params = init_params(cfg, jax.random.key(0))
+    rng = rng_from(13, 0xD157)
+    streams = [rng.integers(0, g.num_nodes, size=int(k))
+               for k in rng.integers(1, 5, size=6)]
+
+    def serve_round(svc, batch):
+        pendings = [svc.submit(s) for s in batch]
+        served = 0
+        while served < len(pendings):
+            served += svc.step(timeout=0.1)
+        return [p.result(timeout=5.0) for p in pendings]
+
+    for w in range(4):
+        svc = GNNInferenceService(pg, sampler, cfg, params, s0=13,
+                                  worker=w, n_hot=32,
+                                  default_timeout_s=30.0)
+        try:
+            for r in serve_round(svc, streams[:3]):      # uncached
+                np.testing.assert_array_equal(
+                    r.logits, svc.oracle(streams[r.rid], r.rid))
+            svc.warmer.warm_now()
+            plan = plan_from_profile("serve-pull-flaky", seed=w)
+            with active_plan(plan):                      # fresh + faults
+                for r in serve_round(svc, streams[3:]):
+                    np.testing.assert_array_equal(
+                        r.logits, svc.oracle(streams[r.rid], r.rid))
+            assert svc.trace_count == 1, svc.trace_count
+        finally:
+            svc.close()
+    print("serve_gnn OK")
+
+
 def check_moe_expert_parallel():
     from repro.dist import make_mesh
     from repro.models.transformer.common import ArchConfig
@@ -599,6 +651,7 @@ if __name__ == "__main__":
               "fault": check_fault_recovery,
               "crashresume": check_crash_resume,
               "topology": check_topology_two_tier,
+              "serve": check_serve_gnn,
               "moe": check_moe_expert_parallel,
               "decode": check_sharded_decode_attention}
     if which == "all":

@@ -87,6 +87,14 @@ def test_topology_two_tier_8dev():
     assert "topology_two_tier OK" in _run("topology", devices=8)
 
 
+def test_serve_gnn_per_worker_bit_equal_4dev():
+    """Online serving on 4 emulated devices: every worker's service
+    serves the same streams bit-equal to its own oracle through the
+    uncached -> fresh tier ladder and under a flaky-pull plan, one XLA
+    trace each."""
+    assert "serve_gnn OK" in _run("serve")
+
+
 def test_moe_expert_parallel_matches_single_device():
     assert "moe_expert_parallel OK" in _run("moe")
 

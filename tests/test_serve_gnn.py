@@ -1,0 +1,328 @@
+"""Online GNN serving tests (ISSUE 10 / DESIGN.md §11): admission /
+shed / deadline unit behaviour, per-tier bit-equality against the clean
+single-request oracle, the stale-snapshot contract, the concurrent
+sync_pull metrics identity, and the chaos property -- any request
+stream under any serve fault profile yields responses that are
+bit-equal to the oracle OR flagged stale with snapshot-consistent
+features OR typed errors; never silent corruption."""
+import threading
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import jax
+
+from repro.core.metrics import EpochMetrics
+from repro.fault import active_plan, plan_from_profile
+from repro.graph import KHopSampler, load_dataset, partition_graph
+from repro.graph.sampler import rng_from
+from repro.models import GNNConfig, init_params
+from repro.serve.gnn import (GNNInferenceService, Overloaded, ServeClosed,
+                             ServePullError, TIER_FRESH, TIER_STALE,
+                             TIER_UNCACHED, WarmerError, serve_pad_bounds)
+
+S0 = 7
+P_ = 4
+_CACHE = {}
+
+
+def _world():
+    """Memoized module world (plain function, not a fixture: the
+    hypothesis shim's ``@given`` wrapper takes no pytest args)."""
+    if "world" not in _CACHE:
+        g = load_dataset("tiny", seed=0)
+        pg = partition_graph(g, P_, "greedy")
+        sampler = KHopSampler(g, fanouts=[3, 3], batch_size=4)
+        cfg = GNNConfig(kind="sage", in_dim=g.feat_dim, hidden_dim=16,
+                        num_classes=g.num_classes, num_layers=2)
+        params = init_params(cfg, jax.random.key(0))
+        _CACHE["world"] = (g, pg, sampler, cfg, params)
+    return _CACHE["world"]
+
+
+def _program():
+    """One compile for the whole module (ServeProgram is shareable
+    across services with identical static shapes)."""
+    if "program" not in _CACHE:
+        g, pg, sampler, cfg, params = _world()
+        _CACHE["program"] = GNNInferenceService(
+            pg, sampler, cfg, params, s0=S0).program
+    return _CACHE["program"]
+
+
+@pytest.fixture(scope="module")
+def world():
+    return _world()
+
+
+@pytest.fixture(scope="module")
+def program(world):
+    return _program()
+
+
+def make_service(world, program, **kw):
+    g, pg, sampler, cfg, params = world
+    kw.setdefault("n_hot", 32)
+    kw.setdefault("high_water", 64)
+    kw.setdefault("default_timeout_s", 30.0)
+    return GNNInferenceService(pg, sampler, cfg, params, s0=S0,
+                               program=program, **kw)
+
+
+def drain(svc, pendings):
+    """Step synchronously (no threads) until every pending resolves;
+    -> list of (pending, response-or-typed-error)."""
+    need = len(pendings)
+    served = 0
+    while served < need:
+        got = svc.step(timeout=0.1)
+        assert got > 0, "dispatcher starved with requests outstanding"
+        served += got
+    out = []
+    for p in pendings:
+        try:
+            out.append((p, p.result(timeout=5.0)))
+        except (Overloaded, ServeClosed, ServePullError,
+                WarmerError) as exc:
+            out.append((p, exc))
+    return out
+
+
+def streams_for(seed, g, n, max_seeds=4):
+    rng = rng_from(seed, 0x7E57)
+    return [rng.integers(0, g.num_nodes, size=int(k))
+            for k in rng.integers(1, max_seeds + 1, size=n)]
+
+
+# ---- tier ladder: uncached -> fresh -> stale, all bit-equal ---------------
+
+def test_uncached_then_fresh_bit_equal_one_trace(world, program):
+    g = world[0]
+    svc = make_service(world, program)
+    try:
+        streams = streams_for(1, g, 6)
+        first = [svc.submit(s) for s in streams[:3]]
+        for p, resp in drain(svc, first):
+            assert resp.tier == TIER_UNCACHED and not resp.stale
+            np.testing.assert_array_equal(
+                resp.logits, svc.oracle(streams[resp.rid], resp.rid))
+        # serving observed the remote traffic; one warm cycle publishes
+        # the hot snapshot and the next round serves the fresh tier
+        assert svc.warmer.warm_now()
+        second = [svc.submit(s) for s in streams[3:]]
+        for p, resp in drain(svc, second):
+            assert resp.tier == TIER_FRESH and not resp.stale
+            np.testing.assert_array_equal(
+                resp.logits, svc.oracle(streams[resp.rid], resp.rid))
+        h = svc.health()
+        assert h["served_uncached"] == 3 and h["served_fresh"] == 3
+        assert h["trace_count"] == 1   # oracle + both tiers, ONE trace
+    finally:
+        svc.close()
+
+
+def test_stale_tier_serves_last_good_snapshot(world, program):
+    g = world[0]
+    svc = make_service(world, program)
+    try:
+        streams = streams_for(2, g, 4)
+        for _p, resp in drain(svc, [svc.submit(s) for s in streams[:2]]):
+            np.testing.assert_array_equal(
+                resp.logits, svc.oracle(streams[resp.rid], resp.rid))
+        assert svc.warmer.warm_now()        # generation 1: healthy
+        # serve-warm-stale kills warm generation 2 past any retry
+        # budget: the warmer degrades, the last-good snapshot stays
+        with active_plan(plan_from_profile("serve-warm-stale", seed=0)):
+            with pytest.raises(WarmerError):
+                svc.warmer.warm_now()
+            for _p, resp in drain(svc,
+                                  [svc.submit(s) for s in streams[2:]]):
+                assert resp.tier == TIER_STALE and resp.stale
+                assert resp.cache_generation == 1
+                # staleness contract: the snapshot served from is
+                # bit-equal to the immutable authoritative table
+                c = resp.served_cache
+                np.testing.assert_array_equal(c.feats, g.features[c.ids])
+                np.testing.assert_array_equal(
+                    resp.logits, svc.oracle(streams[resp.rid], resp.rid))
+        # the warmer self-heals once the fault clears
+        assert svc.warmer.warm_now()
+        assert svc.warmer.snapshot()[1]
+        assert svc.health()["served_stale"] == 2
+    finally:
+        svc.close()
+
+
+# ---- admission: shed, deadlines, close ------------------------------------
+
+def test_overload_sheds_typed_past_high_water(world, program):
+    g = world[0]
+    svc = make_service(world, program, high_water=2)
+    try:
+        streams = streams_for(3, g, 5)
+        admitted = [svc.submit(s) for s in streams[:2]]
+        for s in streams[2:]:
+            with pytest.raises(Overloaded):
+                svc.submit(s)
+        assert svc.queue.shed == 3
+        # shedding burns rids but never re-orders admitted requests
+        assert [p.rid for p in admitted] == [0, 1]
+        results = drain(svc, admitted)
+        for _p, resp in results:
+            np.testing.assert_array_equal(
+                resp.logits, svc.oracle(streams[resp.rid], resp.rid))
+        # queue drained -> admission reopens below high water
+        svc.submit(streams[0])
+    finally:
+        svc.close()
+
+
+def test_expired_deadline_counted_but_still_correct(world, program):
+    g = world[0]
+    svc = make_service(world, program)
+    try:
+        seeds = streams_for(4, g, 1)[0]
+        pending = svc.submit(seeds, timeout_s=0.0)   # already expired
+        (_p, resp), = drain(svc, [pending])
+        assert resp.deadline_missed
+        np.testing.assert_array_equal(resp.logits,
+                                      svc.oracle(seeds, resp.rid))
+        assert svc.health()["deadline_miss"] == 1
+    finally:
+        svc.close()
+
+
+def test_close_fails_backlog_typed_and_rejects_submits(world, program):
+    g = world[0]
+    svc = make_service(world, program)
+    pending = svc.submit(streams_for(5, g, 1)[0])
+    svc.close()
+    with pytest.raises(ServeClosed):
+        pending.result(timeout=1.0)
+    with pytest.raises(ServeClosed):
+        svc.submit(np.array([0]))
+    svc.close()   # idempotent
+
+
+def test_dead_pull_fails_one_request_not_the_batch(world, program):
+    """serve-pull-dead pins rid 1's residual pull dead past any retry:
+    that request fails typed, its batchmates are still bit-equal."""
+    g = world[0]
+    svc = make_service(world, program)
+    try:
+        streams = streams_for(6, g, 3)
+        with active_plan(plan_from_profile("serve-pull-dead", seed=0)):
+            results = drain(svc, [svc.submit(s) for s in streams])
+        for p, r in results:
+            if p.rid == 1:
+                assert isinstance(r, ServePullError)
+            else:
+                np.testing.assert_array_equal(
+                    r.logits, svc.oracle(streams[p.rid], p.rid))
+        assert svc.health()["errors"] == 1
+    finally:
+        svc.close()
+
+
+# ---- static shapes --------------------------------------------------------
+
+def test_serve_pad_bounds_worst_case():
+    # B=4 seeds, fanouts [2, 3] output->input: last hop emits 4*3=12
+    # edges over a frontier of at worst 4*(1+3)=16; first hop 16*2=32
+    m_max, edge_max = serve_pad_bounds([2, 3], 4)
+    assert edge_max == [32, 12]
+    assert m_max == 4 * (1 + 3) * (1 + 2)
+    # a single-seed request can never outgrow the bounds
+    m1, e1 = serve_pad_bounds([2, 3], 1)
+    assert m1 <= m_max and all(a <= b for a, b in zip(e1, edge_max))
+
+
+# ---- concurrent sync_pull metrics identity (the fetch.py lock fix) --------
+
+def test_sync_pull_metrics_identity_under_8_threads(world):
+    """8 threads hammering ONE store with ONE shared EpochMetrics: the
+    accumulated counters must satisfy the exact differential identity
+    ``remote_bytes == rpc_count * row_bytes`` and the per-call count --
+    unsynchronized ``+=`` loses increments under this load."""
+    from repro.core.fetch import ShardedFeatureStore
+
+    g, pg = world[0], world[1]
+    store = ShardedFeatureStore(pg, worker=0)
+    m = EpochMetrics(epoch=0)
+    reps, n_threads = 60, 8
+    rng = rng_from(11, 0x5D)
+    id_sets = [rng.integers(0, g.num_nodes, size=32)
+               for _ in range(n_threads)]
+    n_remote = [int((pg.owner[ids] != 0).sum()) for ids in id_sets]
+    errs = []
+
+    def hammer(ids):
+        try:
+            for _ in range(reps):
+                store.sync_pull(ids, m)
+        except BaseException as exc:           # pragma: no cover
+            errs.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(id_sets[t],))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    row = g.feat_dim * g.features.itemsize
+    assert m.sync_pull_calls == n_threads * reps
+    assert m.rpc_count == reps * sum(n_remote)
+    assert m.remote_bytes == m.rpc_count * row
+
+
+# ---- the serving chaos property -------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([None, "serve-pull-flaky",
+                        "serve-queue-shed", "serve-warm-stale"]))
+def test_any_stream_any_profile_bit_equal_or_stale(seed, profile):
+    """Any request stream x any serve fault profile: every non-shed
+    response is bit-equal to the clean single-request oracle, or
+    ``stale=True`` with features bit-equal to the snapshot it was
+    served from. Typed sheds/pull failures are allowed; silent
+    corruption is not."""
+    world, program = _world(), _program()
+    g = world[0]
+    svc = make_service(world, program)
+    try:
+        streams = streams_for(seed, g, 6)
+        # seed traffic + generation 1 so the stale profile has a
+        # last-good snapshot to degrade to
+        for _p, r in drain(svc, [svc.submit(s) for s in streams[:2]]):
+            np.testing.assert_array_equal(
+                r.logits, svc.oracle(streams[r.rid], r.rid))
+        svc.warmer.warm_now()
+        plan = (plan_from_profile(profile, seed=seed & 0xFFFF)
+                if profile else None)
+        with active_plan(plan):
+            try:
+                svc.warmer.warm_now()
+            except WarmerError:
+                pass                           # degrade -> stale tier
+            pendings = []
+            for s in streams[2:]:
+                try:
+                    pendings.append(svc.submit(s))
+                except Overloaded:
+                    pass                       # typed shed is allowed
+            for p, r in drain(svc, pendings):
+                if isinstance(r, BaseException):
+                    assert isinstance(r, ServePullError)
+                    continue
+                np.testing.assert_array_equal(
+                    r.logits, svc.oracle(streams[r.rid], r.rid))
+                if r.stale:
+                    c = r.served_cache
+                    np.testing.assert_array_equal(c.feats,
+                                                  g.features[c.ids])
+        assert svc.health()["trace_count"] == 1
+    finally:
+        svc.close()
